@@ -1,0 +1,71 @@
+"""Shared benchmark plumbing: timing, stats caching, result records."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, dataclass, field
+
+from repro.configs.graphpi import get_dataset, get_pattern
+from repro.core.executor import ExecutorConfig, Matcher, compute_stats
+from repro.core.perf_model import GraphStats
+from repro.core.plan import build_plan
+
+ART_DIR = os.environ.get("REPRO_BENCH_OUT", "artifacts/bench")
+
+_STATS_CACHE: dict[str, GraphStats] = {}
+_GRAPH_CACHE: dict[str, object] = {}
+
+
+def graph_of(name: str):
+    if name not in _GRAPH_CACHE:
+        _GRAPH_CACHE[name] = get_dataset(name)
+    return _GRAPH_CACHE[name]
+
+
+def stats_of(name: str) -> GraphStats:
+    if name not in _STATS_CACHE:
+        _STATS_CACHE[name] = compute_stats(graph_of(name))
+    return _STATS_CACHE[name]
+
+
+def timed_count(graph, plan, *, capacity: int = 1 << 15,
+                repeats: int = 1, budget_s: float = 120.0):
+    """(count, best_seconds).  Compile excluded (paper methodology).
+
+    budget_s bounds total measurement wall time: if the first timed run
+    exceeds it, we keep that single measurement."""
+    m = Matcher(graph, plan, ExecutorConfig(capacity=capacity))
+    m.warmup()
+    best = None
+    count = None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        out = m.count()
+        dt = time.perf_counter() - t0
+        assert not out.overflowed, "frontier overflow at MAX_CAPACITY"
+        count = out.count
+        best = dt if best is None else min(best, dt)
+        if dt > budget_s:
+            break
+    return count, best
+
+
+@dataclass
+class Row:
+    bench: str
+    keys: dict
+    value: float
+    unit: str
+    extra: dict = field(default_factory=dict)
+
+
+def emit(rows: list[Row], name: str) -> None:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump([asdict(r) for r in rows], f, indent=1)
+    for r in rows:
+        keys = ",".join(f"{k}={v}" for k, v in r.keys.items())
+        print(f"{r.bench},{keys},{r.value:.6g},{r.unit}")
+    print(f"[bench] wrote {path}")

@@ -1,0 +1,71 @@
+"""Fig. 11 — accuracy of the performance prediction model.
+
+For each pattern, measure every generated schedule (best restriction set
+per the model) and compare the model's pick against the measured oracle.
+Paper: picks average 32% slower than oracle.  Also reports the rank
+correlation between predicted and measured cost — a stronger statement
+than the paper's single-number comparison.
+"""
+from __future__ import annotations
+
+from repro.core.perf_model import predict_cost
+from repro.core.plan import build_plan
+from repro.core.restrictions import generate_restriction_sets
+from repro.core.schedule import generate_schedules
+
+from ._util import Row, emit, get_pattern, graph_of, stats_of, timed_count
+
+QUICK = {"patterns": ["P1", "P2", "P4"], "datasets": ["tiny-er"]}
+FULL = {"patterns": ["P1", "P2", "P3", "P4", "P5", "P6"],
+        "datasets": ["tiny-er", "small-rmat"]}
+
+
+def _spearman(xs, ys) -> float:
+    import numpy as np
+
+    rx = np.argsort(np.argsort(xs)).astype(float)
+    ry = np.argsort(np.argsort(ys)).astype(float)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = float(np.sqrt((rx ** 2).sum() * (ry ** 2).sum()))
+    return float((rx * ry).sum() / denom) if denom else 0.0
+
+
+def run(full: bool = False, repeats: int = 2) -> list[Row]:
+    spec = FULL if full else QUICK
+    rows: list[Row] = []
+    for ds in spec["datasets"]:
+        graph, stats = graph_of(ds), stats_of(ds)
+        for pname in spec["patterns"]:
+            pattern = get_pattern(pname)
+            res_sets = generate_restriction_sets(pattern)
+            predicted, measured = [], []
+            for order in generate_schedules(pattern):
+                rs = min(res_sets,
+                         key=lambda r: predict_cost(pattern, order, r, stats))
+                cost = predict_cost(pattern, order, rs, stats)
+                _, dt = timed_count(graph, build_plan(pattern, order, rs),
+                                    repeats=repeats)
+                predicted.append(cost)
+                measured.append(dt)
+            i_pick = min(range(len(predicted)), key=predicted.__getitem__)
+            i_oracle = min(range(len(measured)), key=measured.__getitem__)
+            rows.append(Row(
+                "fig11", {"dataset": ds, "pattern": pname},
+                measured[i_pick] / measured[i_oracle], "pick/oracle", {
+                    "pick_s": measured[i_pick],
+                    "oracle_s": measured[i_oracle],
+                    "spearman": _spearman(predicted, measured),
+                    "n_schedules": len(measured),
+                }))
+    return rows
+
+
+def main(full: bool = False):
+    emit(run(full), "fig11_model_accuracy")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

@@ -1,0 +1,91 @@
+"""Fig. 9 — the schedule landscape for one pattern.
+
+Measures EVERY prefix-connected schedule of a pattern (the superset the
+2-phase generator filters), marking for each whether the 2-phase
+generator kept it, and where GraphPi's model pick / GraphZero's
+heuristic pick / the oracle land.  The paper's claims:
+  * most eliminated schedules are slow (the generator is safe),
+  * the model pick is within ~22-32% of the oracle,
+  * the oracle is up to 8× faster than the worst kept schedule.
+"""
+from __future__ import annotations
+
+import itertools
+
+from repro.core.config_search import graphzero_configuration, search_configuration
+from repro.core.perf_model import predict_cost
+from repro.core.plan import build_plan
+from repro.core.restrictions import generate_restriction_sets
+from repro.core.schedule import generate_schedules, is_prefix_connected
+
+from ._util import Row, emit, get_pattern, graph_of, stats_of, timed_count
+
+# quick: the House — its 60-schedule pool shows the 2-phase filter
+# eliminating 44 schedules; P3 (the paper's figure) runs under --full.
+QUICK = {"pattern": "P1", "dataset": "tiny-er"}
+FULL = {"pattern": "P3", "dataset": "tiny-er"}
+
+
+def run(full: bool = False, repeats: int = 2) -> list[Row]:
+    spec = FULL if full else QUICK
+    pattern = get_pattern(spec["pattern"])
+    graph, stats = graph_of(spec["dataset"]), stats_of(spec["dataset"])
+
+    # one restriction algorithm for everything (paper methodology: isolate
+    # the schedule choice) — GraphZero's canonical set
+    rs = generate_restriction_sets(pattern)[0]
+    kept = set(generate_schedules(pattern))
+    # measure all prefix-connected schedules (the pool phase 2 prunes);
+    # fully unconnected ones are catastrophically slow and excluded from
+    # measurement in the paper's figure too
+    pool = [
+        o for o in itertools.permutations(range(pattern.n))
+        if is_prefix_connected(pattern, o)
+    ]
+
+    res = search_configuration(pattern, stats)
+    # model pick restricted to the same restriction set:
+    model_pick = min(kept, key=lambda o: predict_cost(pattern, o, rs, stats))
+    gz_pick = graphzero_configuration(pattern, stats).order
+
+    rows: list[Row] = []
+    times = {}
+    for order in pool:
+        c, dt = timed_count(graph, build_plan(pattern, order, rs),
+                            repeats=repeats)
+        times[order] = dt
+        rows.append(Row(
+            "fig9",
+            {"pattern": spec["pattern"], "dataset": spec["dataset"],
+             "schedule": "".join(map(str, order))},
+            dt, "s",
+            {"kept_by_2phase": order in kept,
+             "is_model_pick": order == model_pick,
+             "is_graphzero_pick": order == gz_pick,
+             "count": c},
+        ))
+    oracle = min(times, key=times.get)
+    kept_times = [times[o] for o in pool if o in kept]
+    rows.append(Row("fig9", {"pattern": spec["pattern"],
+                             "dataset": spec["dataset"],
+                             "schedule": "SUMMARY"},
+                    times[model_pick] / times[oracle], "pick/oracle", {
+        "oracle": "".join(map(str, oracle)),
+        "oracle_s": times[oracle],
+        "model_pick_s": times[model_pick],
+        "gz_pick_s": times.get(gz_pick),
+        "worst_kept_over_oracle":
+            (max(kept_times) / times[oracle]) if kept_times else None,
+        "n_pool": len(pool), "n_kept": len(kept),
+    }))
+    return rows
+
+
+def main(full: bool = False):
+    emit(run(full), "fig9_schedules")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

@@ -1,0 +1,87 @@
+"""Pallas intersection-kernel micro-benchmark (the paper's hot spot).
+
+Compares three implementations of batched membership/intersection-count
+over sorted padded neighbor lists:
+  binary-search : the portable executor path (vectorized per-segment
+                  binary search over flat CSR),
+  pallas        : blocked broadcast-compare kernel (interpret mode on
+                  CPU — correctness + lowering; the HLO it emits is the
+                  TPU path),
+  jnp-ref       : the pure-jnp oracle (ref.py).
+
+On CPU only relative correctness + rough timing are meaningful; the
+VMEM/roofline arguments for the kernel live in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from ._util import Row, emit
+
+SHAPES_QUICK = [(256, 128, 128), (512, 128, 256)]
+SHAPES_FULL = [(256, 128, 128), (512, 128, 256), (1024, 256, 512),
+               (4096, 128, 128)]
+
+
+def _data(B, D, L, seed=0):
+    rng = np.random.default_rng(seed)
+    # strictly increasing rows (CSR contract)
+    nbr = np.stack(
+        [np.sort(rng.choice(10 * L, size=L, replace=False)) for _ in range(B)]
+    ).astype(np.int32)
+    cand = rng.integers(0, 10 * L, size=(B, D)).astype(np.int32)
+    return jnp.asarray(cand), jnp.asarray(nbr)
+
+
+def _time(fn, *args, repeats=3):
+    jax.block_until_ready(fn(*args))        # compile + warm
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    jref = jax.jit(ref.membership_ref)
+    for (B, D, L) in (SHAPES_FULL if full else SHAPES_QUICK):
+        cand, nbr = _data(B, D, L)
+        out_ref = jref(cand, nbr)
+        out_pl = ops.sorted_membership(cand, nbr)
+        assert bool(jnp.all(out_ref == out_pl)), (B, D, L)
+
+        t_pl = _time(lambda: ops.sorted_membership(cand, nbr))
+        t_ref = _time(lambda: jref(cand, nbr))
+        cnt_pl = ops.intersect_count(cand, nbr)
+        assert bool(jnp.all(cnt_pl == out_ref.sum(axis=1)))
+        t_cnt = _time(lambda: ops.intersect_count(cand, nbr))
+
+        compares = B * D * L
+        rows.append(Row("kernel", {"B": B, "D": D, "L": L,
+                                   "impl": "pallas-membership"},
+                        t_pl, "s", {"gcmp_per_s": compares / t_pl / 1e9}))
+        rows.append(Row("kernel", {"B": B, "D": D, "L": L,
+                                   "impl": "jnp-ref-membership"},
+                        t_ref, "s", {"gcmp_per_s": compares / t_ref / 1e9}))
+        rows.append(Row("kernel", {"B": B, "D": D, "L": L,
+                                   "impl": "pallas-count"},
+                        t_cnt, "s", {"gcmp_per_s": compares / t_cnt / 1e9}))
+    return rows
+
+
+def main(full: bool = False):
+    emit(run(full), "kernel_intersect")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

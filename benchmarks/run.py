@@ -1,0 +1,68 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run              # quick tier
+    PYTHONPATH=src python -m benchmarks.run --full       # paper-scale tier
+    PYTHONPATH=src python -m benchmarks.run --only fig10,tab3
+
+Each module prints `bench,key=value...,value,unit` CSV rows and writes a
+JSON artifact under artifacts/bench/.  The quick tier finishes on a CPU
+container in minutes; --full uses the larger synthetic datasets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    fig8_overall,
+    fig9_schedules,
+    fig10_iep,
+    fig11_model_accuracy,
+    fig12_scaling,
+    kernel_intersect,
+    tab2_restrictions,
+    tab3_overhead,
+)
+
+BENCHES = {
+    "fig8": fig8_overall.main,       # overall perf vs GraphZero/naive
+    "tab2": tab2_restrictions.main,  # restriction-set selection speedup
+    "fig9": fig9_schedules.main,     # schedule landscape + 2-phase filter
+    "fig10": fig10_iep.main,         # IEP on/off
+    "fig11": fig11_model_accuracy.main,  # model pick vs oracle
+    "fig12": fig12_scaling.main,     # scaling / load balance
+    "tab3": tab3_overhead.main,      # preprocessing overhead
+    "kernel": kernel_intersect.main, # Pallas intersection kernel
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or \
+        list(BENCHES)
+    failures = []
+    for name in names:
+        print(f"\n=== {name} {'(full)' if args.full else '(quick)'} ===")
+        t0 = time.time()
+        try:
+            BENCHES[name](args.full)
+            print(f"=== {name} done in {time.time() - t0:.1f}s ===")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}", file=sys.stderr)
+        return 1
+    print("\nall benchmarks OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Table III — preprocessing + plan-generation overhead per pattern.
+
+The paper reports 8 ms – 2.53 s for P1..P6 (pattern-only, independent of
+the data graph).  We time the three plan-time stages separately:
+restriction generation (Alg. 1 incl. K_n validation), 2-phase schedule
+generation, and full configuration search (cost model over every
+schedule × restriction set with IEP variants).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.config_search import search_configuration
+from repro.core.perf_model import GraphStats
+from repro.core.restrictions import generate_restriction_sets
+from repro.core.schedule import generate_schedules
+
+from ._util import Row, emit, get_pattern, stats_of
+
+PATTERNS = ["P1", "P2", "P3", "P4", "P5", "P6"]
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    # Stats are graph-dependent but cheap; use a fixed small graph's stats
+    # (the paper's Table III is also a single number per pattern).
+    stats = stats_of("tiny-er")
+    for pname in PATTERNS:
+        pattern = get_pattern(pname)
+        t0 = time.perf_counter()
+        res_sets = generate_restriction_sets(pattern)
+        t_res = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        schedules = generate_schedules(pattern)
+        t_sched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = search_configuration(pattern, stats, use_iep=True)
+        t_total = time.perf_counter() - t0
+        rows.append(Row("tab3", {"pattern": pname}, t_total, "s", {
+            "restriction_gen_s": t_res,
+            "schedule_gen_s": t_sched,
+            "n_restriction_sets": len(res_sets),
+            "n_schedules": len(schedules),
+            "n_configs": len(res.all_configs),
+        }))
+    return rows
+
+
+def main(full: bool = False):
+    emit(run(full), "tab3_overhead")
+
+
+if __name__ == "__main__":
+    main()

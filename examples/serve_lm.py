@@ -1,0 +1,22 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Uses the production serving path (make_prefill/make_decode — the same
+functions the 256-chip dry-run lowers) on a reduced MoE config, so the
+expert-parallel decode path is exercised on CPU.
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    return serve_main([
+        "--arch", "granite-moe-1b-a400m", "--smoke",
+        "--batch", "4", "--prompt-len", "32", "--gen", "16",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

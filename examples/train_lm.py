@@ -1,0 +1,35 @@
+"""Train a small LM end to end (fault-tolerant loop, real optimizer).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Uses the production train path (make_train_step: sharded params/opt
+state, remat, donation) on a reduced qwen3-family config sized for CPU.
+Interrupt it (Ctrl-C) and rerun — it resumes from the atomic checkpoint
+and the step-indexed data pipeline continues the exact token stream.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+    return train_main([
+        "--arch", "qwen3-1.7b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+        "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

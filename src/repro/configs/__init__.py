@@ -1,0 +1,82 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get_config(arch)` returns the full (paper-exact) ModelConfig;
+`get_smoke_config(arch)` returns the reduced same-family variant used by
+CPU smoke tests; `input_specs(cfg, shape, mesh=None)` builds the
+ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+ARCHS = [
+    "whisper-base",
+    "granite-moe-1b-a400m",
+    "moonshot-v1-16b-a3b",
+    "minitron-4b",
+    "granite-34b",
+    "qwen3-4b",
+    "qwen3-1.7b",
+    "jamba-v0.1-52b",
+    "mamba2-370m",
+    "qwen2-vl-72b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCHS}")
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    return mod.SMOKE
+
+
+def supported_shapes(arch: str) -> list[str]:
+    """Shape cells this arch runs; long_500k only for sub-quadratic
+    families (DESIGN.md §4)."""
+    cfg = get_config(arch)
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in ("ssm", "hybrid"):
+        shapes.append("long_500k")
+    return shapes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, batch=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns (batch_pytree, kind).  No device allocation (dry-run safe)."""
+    import jax
+    import jax.numpy as jnp
+
+    B = batch if batch is not None else shape.global_batch
+    S = shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind in ("train", "prefill"):
+        batch_d = {}
+        if cfg.stub_frontend and cfg.family == "vlm":
+            batch_d["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+            batch_d["positions3"] = jax.ShapeDtypeStruct((B, 3, S), i32)
+        else:
+            batch_d["tokens"] = tok(B, S)
+        if cfg.family == "encdec":
+            batch_d["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16
+            )
+        if shape.kind == "train":
+            batch_d["labels"] = tok(B, S)
+        return batch_d
+    # decode: one new token against a seq_len cache
+    return {"tokens": tok(B, 1)}

@@ -1,0 +1,124 @@
+"""Pure-Python reference matcher (the `ref` oracle for every JAX path).
+
+Recursive DFS exactly like the paper's generated nested loops — slow, but
+obviously correct.  Used by unit/property tests and validation only.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .pattern import Pattern
+from .plan import MatchingPlan
+
+
+def _adj_sets(n: int, edges: np.ndarray) -> list[set[int]]:
+    adj: list[set[int]] = [set() for _ in range(n)]
+    for u, v in edges:
+        u, v = int(u), int(v)
+        if u == v:
+            continue
+        adj[u].add(v)
+        adj[v].add(u)
+    return adj
+
+
+def count_injective_maps(
+    n_vertices: int, edges: np.ndarray, pattern: Pattern
+) -> int:
+    """#injective maps pattern→graph preserving pattern edges.
+
+    Equals (#embeddings) × |Aut(pattern)|.
+    """
+    adj = _adj_sets(n_vertices, edges)
+    padj = pattern.adjacency()
+    n = pattern.n
+    assigned = [-1] * n
+    used: set[int] = set()
+    count = 0
+
+    def rec(i: int) -> None:
+        nonlocal count
+        if i == n:
+            count += 1
+            return
+        # candidates: any vertex adjacent to all already-assigned neighbors
+        earlier = [j for j in range(i) if padj[i, j]]
+        if earlier:
+            cand = set(adj[assigned[earlier[0]]])
+            for j in earlier[1:]:
+                cand &= adj[assigned[j]]
+        else:
+            cand = set(range(n_vertices))
+        for c in sorted(cand):
+            if c in used:
+                continue
+            assigned[i] = c
+            used.add(c)
+            rec(i + 1)
+            used.remove(c)
+        assigned[i] = -1
+
+    rec(0)
+    return count
+
+
+def count_with_plan(
+    n_vertices: int, edges: np.ndarray, plan: MatchingPlan
+) -> int:
+    """Reference execution of a MatchingPlan (restrictions honored,
+    enumeration only — IEP tail, if any, is enumerated explicitly and must
+    produce plan.iep_divisor × the IEP count)."""
+    adj = _adj_sets(n_vertices, edges)
+    n = plan.n
+    assigned = [-1] * n
+    used: set[int] = set()
+    count = 0
+    # For reference purposes we always enumerate all n levels with the
+    # PREFIX restrictions only (restrictions the IEP path keeps).
+    restr = plan.restr
+
+    def rec(i: int) -> None:
+        nonlocal count
+        if i == n:
+            count += 1
+            return
+        preds = plan.preds[i]
+        if preds:
+            cand = set(adj[assigned[preds[0]]])
+            for j in preds[1:]:
+                cand &= adj[assigned[j]]
+        else:
+            cand = set(range(n_vertices))
+        for c in sorted(cand):
+            if c in used:
+                continue
+            ok = True
+            for (other, d) in restr[i]:
+                if d > 0 and not (c > assigned[other]):
+                    ok = False
+                    break
+                if d < 0 and not (c < assigned[other]):
+                    ok = False
+                    break
+            if not ok:
+                continue
+            assigned[i] = c
+            used.add(c)
+            rec(i + 1)
+            used.remove(c)
+        assigned[i] = -1
+
+    rec(0)
+    return count
+
+
+def count_embeddings_oracle(
+    n_vertices: int, edges: np.ndarray, pattern: Pattern
+) -> int:
+    """#distinct embeddings (subgraphs) = injective maps / |Aut|."""
+    maps = count_injective_maps(n_vertices, edges, pattern)
+    aut = pattern.aut_count()
+    assert maps % aut == 0, (maps, aut)
+    return maps // aut

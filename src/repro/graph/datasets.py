@@ -1,0 +1,89 @@
+"""Graph generators and loaders.
+
+The container is offline, so the paper's SNAP graphs are stood in for by
+synthetic generators matched to their |V|/|E| scale (DESIGN.md §6).  The
+edge-list loader accepts the exact SNAP format, so the real datasets plug
+in unchanged on a connected machine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import GraphCSR
+
+
+def complete_graph(n: int) -> GraphCSR:
+    iu = np.triu_indices(n, k=1)
+    edges = np.stack([iu[0], iu[1]], axis=1)
+    return GraphCSR.from_edges(n, edges, name=f"K{n}")
+
+
+def erdos_renyi(n: int, m: int, seed: int = 0, name: str = "") -> GraphCSR:
+    """~m undirected edges sampled uniformly (dedup may shave a few)."""
+    rng = np.random.default_rng(seed)
+    # oversample to survive dedup/self-loop removal
+    k = int(m * 1.2) + 16
+    e = rng.integers(0, n, size=(k, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]][:m]
+    return GraphCSR.from_edges(n, e, name=name or f"ER({n},{m})")
+
+
+def rmat(
+    scale: int,
+    edge_factor: int = 16,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+    name: str = "",
+    relabel_by_degree: bool = True,
+) -> GraphCSR:
+    """R-MAT power-law generator (Graph500 parameters by default).
+
+    Produces the heavy-tailed degree distributions that make the paper's
+    load-balancing (fine-grained task partitioning) matter.
+    """
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities (a, b, c, d)
+        go_right = r >= a + b          # dst high bit
+        go_down = ((r >= a) & (r < a + b)) | (r >= a + b + c)  # src high bit
+        src |= go_down.astype(np.int64) << bit
+        dst |= go_right.astype(np.int64) << bit
+    edges = np.stack([src, dst], axis=1)
+    return GraphCSR.from_edges(
+        n, edges, relabel_by_degree=relabel_by_degree, name=name or f"RMAT{scale}"
+    )
+
+
+def load_edge_list(path: str, name: str = "") -> GraphCSR:
+    """SNAP-style whitespace edge list; '#' comments allowed."""
+    edges = np.loadtxt(path, dtype=np.int64, comments="#").reshape(-1, 2)
+    n = int(edges.max()) + 1
+    return GraphCSR.from_edges(n, edges, name=name or path)
+
+
+# --------------------------------------------------------------------------
+# Named synthetic stand-ins scaled like the paper's datasets (Table I).
+# (wiki-vote 7.1K/100.8K, mico 96.6K/1.1M, patents 3.8M/16.5M, ...)
+# Only the first two are sized for CPU-quick runs; the rest gate behind
+# explicit benchmark flags.
+# --------------------------------------------------------------------------
+_NAMED = {
+    "wiki-vote-syn": lambda: rmat(13, 12, seed=1, name="wiki-vote-syn"),
+    "mico-syn": lambda: rmat(17, 11, seed=2, name="mico-syn"),
+    "patents-syn": lambda: rmat(22, 4, seed=3, name="patents-syn"),
+    "tiny-er": lambda: erdos_renyi(256, 2048, seed=4, name="tiny-er"),
+    "small-rmat": lambda: rmat(10, 8, seed=5, name="small-rmat"),
+}
+
+
+def named_dataset(name: str) -> GraphCSR:
+    if name not in _NAMED:
+        raise KeyError(f"unknown dataset {name!r}; have {sorted(_NAMED)}")
+    return _NAMED[name]()

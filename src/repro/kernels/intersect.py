@@ -1,0 +1,135 @@
+"""Pallas TPU kernels for the set-intersection hot spot.
+
+GraphPi's inner loop is a sorted-list merge intersection — a pointer-
+chasing pattern that does not vectorize on TPU.  The TPU-native
+formulation (DESIGN.md §3) is *blocked broadcast-compare*: tile the
+candidate row and the neighbor row into VREG-shaped blocks in VMEM and
+reduce equality matches across the neighbor dimension.  Arithmetic
+intensity is D·L compares per D+L loaded words, so for typical
+neighborhood lengths the kernel is compute-dense on the VPU instead of
+latency-bound like a merge.
+
+Two kernels:
+  membership_kernel      mask[b, d] = cand[b, d] ∈ nbr[b, :]
+  intersect_count_kernel cnt[b]     = |{d : cand[b, d] ∈ nbr[b, :]}|
+                         (membership + in-kernel popcount, fused)
+
+Padding contract: `cand` padded with -1, `nbr` padded with INT_MAX
+(sorted ascending), so padding never produces a match.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NBR_PAD = jnp.iinfo(jnp.int32).max
+CAND_PAD = -1
+
+
+def _membership_body(cand_ref, nbr_ref, out_ref, *, block_l: int):
+    """Grid = (B/bb, D/bd, L/bl); L is the innermost (accumulation) dim."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cand = cand_ref[...]                  # [bb, bd]
+    nbr = nbr_ref[...]                    # [bb, bl]
+    # broadcast-compare: [bb, bd, bl] equality cube, reduced over bl
+    hit = (cand[:, :, None] == nbr[:, None, :]).any(axis=-1)
+    out_ref[...] |= hit
+
+
+def _count_body(cand_ref, nbr_ref, out_ref, acc_ref, *, block_l: int):
+    """Fused |A ∩ B| per row: the [bb, bd, bl] equality cube is reduced
+    over BOTH d and l inside the kernel; the row accumulator lives in VMEM
+    scratch and is flushed once per row-block.
+
+    Contract: nbr rows strictly increasing on their valid prefix (CSR
+    neighborhoods are), so a candidate matches in at most one l-block.
+    """
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    nj = pl.num_programs(1)
+    nk = pl.num_programs(2)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cand = cand_ref[...]                  # [bb, bd]
+    nbr = nbr_ref[...]                    # [bb, bl]
+    hit = (cand[:, :, None] == nbr[:, None, :]).any(axis=-1)
+    acc_ref[...] += hit.sum(axis=1, keepdims=True).astype(jnp.int32)
+
+    @pl.when((j == nj - 1) & (k == nk - 1))
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def membership_pallas(
+    cand: jax.Array,
+    nbr: jax.Array,
+    *,
+    block_b: int = 8,
+    block_d: int = 128,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """mask[b, d] = cand[b, d] ∈ nbr[b, :].  Shapes must be pre-padded to
+    block multiples (ops.sorted_membership handles that)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, D = cand.shape
+    Bn, L = nbr.shape
+    assert B == Bn, (cand.shape, nbr.shape)
+    assert B % block_b == 0 and D % block_d == 0 and L % block_l == 0
+    grid = (B // block_b, D // block_d, L // block_l)
+    return pl.pallas_call(
+        functools.partial(_membership_body, block_l=block_l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_l), lambda i, j, k: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.bool_),
+        interpret=interpret,
+    )(cand, nbr)
+
+
+def intersect_count_pallas(
+    cand: jax.Array,
+    nbr: jax.Array,
+    *,
+    block_b: int = 8,
+    block_d: int = 128,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """cnt[b] = |{d : cand[b, d] ∈ nbr[b, :]}| (int32), fully fused: the
+    d and l reductions happen in-kernel, output is one scalar per row."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, D = cand.shape
+    _, L = nbr.shape
+    assert B % block_b == 0 and D % block_d == 0 and L % block_l == 0
+    grid = (B // block_b, D // block_d, L // block_l)
+    out = pl.pallas_call(
+        functools.partial(_count_body, block_l=block_l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_b, block_l), lambda i, j, k: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.int32)],
+        interpret=interpret,
+    )(cand, nbr)
+    return out[:, 0]

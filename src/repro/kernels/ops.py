@@ -1,0 +1,124 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle padding to block multiples and the padding-value contract
+(cand -1 / nbr INT_MAX), so callers pass ragged-ish data freely.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .intersect import (
+    CAND_PAD, NBR_PAD, intersect_count_pallas, membership_pallas,
+)
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int, value) -> jax.Array:
+    b = (-x.shape[0]) % mult0
+    d = (-x.shape[1]) % mult1
+    if b or d:
+        x = jnp.pad(x, ((0, b), (0, d)), constant_values=value)
+    return x
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_d", "block_l", "interpret"))
+def sorted_membership(
+    cand: jax.Array,
+    nbr: jax.Array,
+    cand_valid: jax.Array | None = None,
+    nbr_len: jax.Array | None = None,
+    *,
+    block_b: int = 8,
+    block_d: int = 128,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """mask[b, d] = cand[b, d] ∈ nbr[b, :nbr_len[b]] (rows sorted asc).
+
+    cand_valid / nbr_len mask out ragged tails; padding never matches.
+    """
+    B, D = cand.shape
+    cand = cand.astype(jnp.int32)
+    nbr = nbr.astype(jnp.int32)
+    if cand_valid is not None:
+        cand = jnp.where(cand_valid, cand, CAND_PAD)
+    if nbr_len is not None:
+        pos = jnp.arange(nbr.shape[1], dtype=jnp.int32)[None, :]
+        nbr = jnp.where(pos < nbr_len[:, None], nbr, NBR_PAD)
+    cand_p = _pad_to(cand, block_b, block_d, CAND_PAD)
+    nbr_p = _pad_to(nbr, block_b, block_l, NBR_PAD)
+    out = membership_pallas(
+        cand_p, nbr_p,
+        block_b=block_b, block_d=block_d, block_l=block_l,
+        interpret=interpret,
+    )
+    return out[:B, :D]
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_d", "block_l", "interpret"))
+def intersect_count(
+    cand: jax.Array,
+    nbr: jax.Array,
+    cand_valid: jax.Array | None = None,
+    nbr_len: jax.Array | None = None,
+    *,
+    block_b: int = 8,
+    block_d: int = 128,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """cnt[b] = |{d : cand[b,d] ∈ nbr[b,:]}| — fused count kernel.
+
+    Contract: nbr rows strictly increasing on the valid prefix."""
+    B, D = cand.shape
+    cand = cand.astype(jnp.int32)
+    nbr = nbr.astype(jnp.int32)
+    if cand_valid is not None:
+        cand = jnp.where(cand_valid, cand, CAND_PAD)
+    if nbr_len is not None:
+        pos = jnp.arange(nbr.shape[1], dtype=jnp.int32)[None, :]
+        nbr = jnp.where(pos < nbr_len[:, None], nbr, NBR_PAD)
+    cand_p = _pad_to(cand, block_b, block_d, CAND_PAD)
+    nbr_p = _pad_to(nbr, block_b, block_l, NBR_PAD)
+    out = intersect_count_pallas(
+        cand_p, nbr_p,
+        block_b=block_b, block_d=block_d, block_l=block_l,
+        interpret=interpret,
+    )
+    return out[:B]
+
+
+# ------------------------------------------------------------ attention ---
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(
+    q: jax.Array,                 # [B, Sq, H, hd]
+    k: jax.Array,                 # [B, Sk, K, hd]
+    v: jax.Array,                 # [B, Sk, K, hd]
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Model-layout wrapper: folds (B, heads) into the kernel's row dim,
+    using the zero-copy GQA block-index mapping (kv heads are never
+    materialized per q-head).  Falls back to shapes the kernel supports;
+    callers guard on S % block == 0."""
+    from .flash_attention import flash_attention_pallas
+
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    # [B, S, H, hd] -> [B*H, S, hd] with q-heads of one kv-group adjacent,
+    # so kernel row i maps to kv row i // G.
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    of = flash_attention_pallas(
+        qf, kf, vf, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return of.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref.py` contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def membership_ref(cand: jax.Array, nbr: jax.Array) -> jax.Array:
+    """mask[b, d] = cand[b, d] ∈ nbr[b, :] — O(B·D·L) broadcast compare."""
+    return (cand[:, :, None] == nbr[:, None, :]).any(axis=-1)
+
+
+def membership_ref_searchsorted(cand: jax.Array, nbr: jax.Array) -> jax.Array:
+    """Second oracle via per-row binary search (nbr rows must be sorted)."""
+
+    def row(c, nb):
+        idx = jnp.searchsorted(nb, c)
+        idx = jnp.minimum(idx, nb.shape[0] - 1)
+        return nb[idx] == c
+
+    return jax.vmap(row)(cand, nbr)
+
+
+def intersect_count_ref(cand: jax.Array, nbr: jax.Array) -> jax.Array:
+    return membership_ref(cand, nbr).astype(jnp.int32)
+
+
+# ------------------------------------------------------------ attention ---
+def flash_attention_ref(q, k, v, *, causal=True, sm_scale=None):
+    """Oracle for the flash kernel: plain softmax attention in fp32.
+
+    q [BH, Sq, hd]; k/v [BK, Sk, hd] with BH % BK == 0 (GQA groups)."""
+    import math
+
+    BH, Sq, hd = q.shape
+    BK = k.shape[0]
+    g = BH // BK
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=0)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), kf) * sm_scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w, vf).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: (16, 16) single pod, (2, 16, 16) two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (CI/local): data × model."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )
+
+
+HW = {
+    # TPU v5e per-chip numbers used for the roofline terms
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_link_bw": 50e9,           # B/s per link (prompt-specified)
+    "hbm_bytes": 16e9,
+}

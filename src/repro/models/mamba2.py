@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked matmul formulation.
+
+The SSD scan is reorganized into MXU-friendly matmuls (the "chunked"
+algorithm from the Mamba-2 paper): within a chunk of length Q all
+interactions are dense matmuls under a decay mask; across chunks a small
+recurrent state [H, hd, ds] is carried by a lax.scan.
+
+Decode is the O(1) recurrent update: h ← a·h + dt·B⊗x, y = C·h + D·x.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, cast, dense, init_dense, rms_norm
+
+
+def init_mamba(key, cfg) -> Params:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, cw = cfg.ssm_heads, cfg.conv_width
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * ds + nh          # z, x, B, C, dt
+    conv_dim = di + 2 * ds
+    return {
+        "in_proj": init_dense(ks[0], d, d_in_proj),
+        "conv_w": jax.random.normal(ks[1], (cw, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),                                     # per-head decay
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),  # gated RMSNorm scale
+        "out_proj": init_dense(ks[4], di, d),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, *, state=None):
+    """Depthwise causal conv, width cw.  xBC [B,S,Cd]; w [cw,Cd].
+    With `state` [B,cw-1,Cd] it runs in streaming (decode) mode and
+    returns the updated state."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (cw - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(
+        full[:, i : i + xBC.shape[1], :] * w[i][None, None, :].astype(xBC.dtype)
+        for i in range(cw)
+    )
+    out = jax.nn.silu(out + b.astype(xBC.dtype))
+    new_state = full[:, -(cw - 1) :, :] if cw > 1 else None
+    return out, new_state
+
+
+def _gated_norm(y, z, scale, eps):
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def mamba_block(p: Params, x, cfg, dtype, *, initial_state=None):
+    """x [B,S,d] → y [B,S,d].  S must be a multiple of cfg.ssm_chunk
+    (callers pad).  Returns (y, state) with state = {"h", "conv"}
+    (decode-compatible: see init_mamba_state)."""
+    B, S, d = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    zxbcdt = dense(p["in_proj"], x, dtype)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_state = _causal_conv(
+        xBC, p["conv_w"], p["conv_b"],
+        state=None if initial_state is None else initial_state["conv"],
+    )
+    xs = xBC[..., :di].reshape(B, S, nh, hd)
+    Bm = xBC[..., di : di + ds]                       # [B,S,ds] (1 group)
+    Cm = xBC[..., di + ds :]                          # [B,S,ds]
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"]
+    )                                                 # [B,S,nh]
+    A = -jnp.exp(p["A_log"])                          # [nh] negative
+    # discretize: per-step log decay  aᵗ = exp(A·dtᵗ)
+    dA = dt * A[None, None, :]                        # [B,S,nh] (log a)
+
+    nq = S // Q
+    xs = xs.reshape(B, nq, Q, nh, hd)
+    Bm = Bm.reshape(B, nq, Q, ds)
+    Cm = Cm.reshape(B, nq, Q, ds)
+    dtc = dt.reshape(B, nq, Q, nh)
+    dAc = dA.reshape(B, nq, Q, nh)
+
+    seg = jnp.cumsum(dAc, axis=2)                     # [B,nq,Q,nh]
+    # intra-chunk (dual/quadratic form): L[q,s] = exp(seg_q - seg_s) (q>=s)
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]    # [B,nq,Q,Q,nh]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: exp of the (positive) upper triangle would overflow
+    # and poison the backward pass with 0·inf
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    L = jnp.exp(rel)
+    cb = jnp.einsum("bnqs,bnts->bnqt", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))           # [B,nq,Q,Q]
+    gate = cb[..., None] * L                          # [B,nq,Q,Q,nh]
+    xdt = xs.astype(jnp.float32) * dtc[..., None]     # [B,nq,Q,nh,hd]
+    y_intra = jnp.einsum("bnqth,bnthp->bnqhp", gate, xdt)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(seg[:, :, -1, :])           # [B,nq,nh]
+    # state contribution of each chunk: Σ_s exp(seg_last - seg_s)·dt·x·B
+    w = jnp.exp(seg[:, :, -1:, :] - seg)              # [B,nq,Q,nh]
+    state_in = jnp.einsum(
+        "bnqs,bnqh,bnqhp->bnhps", Bm.astype(jnp.float32),
+        w * dtc, xs.astype(jnp.float32)
+    )                                                 # [B,nq,nh,hd,ds]
+
+    def scan_fn(h, inp):
+        decay, sin = inp                              # [B,nh], [B,nh,hd,ds]
+        h_new = h * decay[:, :, None, None] + sin
+        return h_new, h                               # emit state BEFORE chunk
+
+    h0 = (
+        initial_state["h"].astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, nh, hd, ds), jnp.float32)
+    )
+    hN, h_before = jax.lax.scan(
+        scan_fn,
+        h0,
+        (chunk_decay.transpose(1, 0, 2), state_in.transpose(1, 0, 2, 3, 4)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)      # [B,nq,nh,hd,ds]
+    # y_inter[t] = exp(seg_t)·C_t·h_chunk_start
+    y_inter = jnp.einsum(
+        "bnqs,bnhps,bnqh->bnqhp", Cm.astype(jnp.float32), h_before,
+        jnp.exp(seg)
+    )
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    y = y + xs.reshape(B, S, nh, hd).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    state = {"h": hN, "conv": conv_state.astype(jnp.float32)}
+    return dense(p["out_proj"], y, dtype), state
+
+
+def mamba_decode_step(p: Params, x, state, cfg, dtype):
+    """x [B,1,d]; state = {"h": [B,nh,hd,ds], "conv": [B,cw-1,conv_dim]}."""
+    B = x.shape[0]
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = dense(p["in_proj"], x, dtype)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_state = _causal_conv(
+        xBC, p["conv_w"], p["conv_b"], state=state["conv"]
+    )
+    xs = xBC[..., :di].reshape(B, nh, hd)
+    Bm = xBC[:, 0, di : di + ds]                      # [B,ds]
+    Cm = xBC[:, 0, di + ds :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))            # [B,nh]
+    h = state["h"].astype(jnp.float32)
+    upd = jnp.einsum(
+        "bh,bhp,bs->bhps", dt, xs.astype(jnp.float32), Bm.astype(jnp.float32)
+    )
+    h = h * a[:, :, None, None] + upd
+    y = jnp.einsum("bhps,bs->bhp", h, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = dense(p["out_proj"], y, dtype)
+    return out, {"h": h, "conv": conv_state}
+
+
+def init_mamba_state(cfg, batch: int):
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * ds
+    return {
+        "h": jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32),
+    }

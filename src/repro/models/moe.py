@@ -1,0 +1,109 @@
+"""Token-choice top-k Mixture-of-Experts.
+
+Two dispatch implementations:
+
+ * `moe_sorted` (default): sort-based capacity-bounded dispatch.  Tokens
+   are argsorted by expert id and scattered into per-expert buckets
+   [E, C, d]; expert FFNs run as one batched einsum over E.  With experts
+   sharded over the mesh `model` axis, the scatter/gather crosses the
+   sharding boundary and lowers to all-to-alls (expert parallelism).
+ * `moe_dense` (reference): computes every expert on every token and
+   combines with routing weights — exact (no capacity drops), used as the
+   oracle in tests and for tiny smoke configs.
+
+Router: softmax over expert logits, top-k, weights renormalized over the
+selected experts (standard Mixtral/granite semantics), plus the usual
+load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, cast, dense, init_dense
+
+
+def init_moe(key, cfg) -> Params:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    return {
+        "router": init_dense(ks[0], d, E),
+        "gate": jax.random.normal(ks[1], (E, d, ff), jnp.float32) * s,
+        "up": jax.random.normal(ks[2], (E, d, ff), jnp.float32) * s,
+        "down": jax.random.normal(ks[3], (E, ff, d), jnp.float32)
+        / jnp.sqrt(ff).astype(jnp.float32),
+    }
+
+
+def _route(p, x, cfg, dtype):
+    """x [N, d] → (weights [N, k], experts [N, k], aux_loss)."""
+    logits = dense(p["router"], x, jnp.float32)          # router in fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch): E * Σ_e f_e · p_e
+    E = cfg.n_experts
+    hot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    f = hot.mean(axis=0)
+    pbar = probs.mean(axis=0)
+    aux = E * jnp.sum(f * pbar)
+    return w.astype(dtype), idx, aux
+
+
+def moe_dense(p: Params, x, cfg, dtype):
+    """Reference: all experts on all tokens."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    w, idx, aux = _route(p, xf, cfg, dtype)
+    g = jnp.einsum("nd,edf->nef", xf, cast(p["gate"], dtype))
+    u = jnp.einsum("nd,edf->nef", xf, cast(p["up"], dtype))
+    y = jnp.einsum("nef,efd->ned", jax.nn.silu(g) * u, cast(p["down"], dtype))
+    sel = jnp.take_along_axis(y, idx[:, :, None], axis=1)   # [N, k, d]
+    out = jnp.einsum("nkd,nk->nd", sel, w)
+    return out.reshape(B, S, d), aux
+
+
+def moe_sorted(p: Params, x, cfg, dtype):
+    """Sort-based dispatch with per-expert capacity.
+
+    capacity C = ceil(N·k/E · capacity_factor); overflow tokens drop
+    (their residual path still carries them — standard capacity-factor
+    semantics)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(-1, d)
+    N = xf.shape[0]
+    w, idx, aux = _route(p, xf, cfg, dtype)
+
+    C = max(1, int((N * k) / E * cfg.capacity_factor))
+    flat_e = idx.reshape(-1)                             # [N*k]
+    flat_t = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    flat_w = w.reshape(-1)
+
+    # stable sort by expert → tokens grouped per expert
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within the expert group: position − group start
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(se.shape[0], dtype=jnp.int32) - starts[se].astype(
+        jnp.int32
+    )
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)         # E*C = drop slot
+
+    buckets = jnp.zeros((E * C, d), dtype)
+    buckets = buckets.at[slot].set(xf[st].astype(dtype), mode="drop")
+    buckets = buckets.reshape(E, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buckets, cast(p["gate"], dtype))
+    u = jnp.einsum("ecd,edf->ecf", buckets, cast(p["up"], dtype))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, cast(p["down"], dtype))
+    y = y.reshape(E * C, d)
+
+    gathered = y[jnp.minimum(slot, E * C - 1)]           # [N*k, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    out = jnp.zeros((N, d), dtype)
+    out = out.at[st].add(gathered * sw[:, None].astype(dtype))
+    return out.reshape(B, S, d), aux

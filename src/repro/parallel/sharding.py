@@ -1,0 +1,249 @@
+"""Sharding rules: map parameter/batch/cache pytrees → PartitionSpecs.
+
+Mesh axes (launch/mesh.py):
+    single pod:  ("data", "model")            = (16, 16)
+    multi-pod:   ("pod", "data", "model")     = (2, 16, 16)
+
+`DP` below = all data-parallel axes (pod+data); `MP` = "model".
+
+Parameter policy (2-D: TP over model, FSDP over data — ZeRO-3-like):
+    embed [V, d]           (MP, DP)     vocab over model, FSDP over d
+    wq/wk/wv [d, Hhd]      (DP, MP)
+    wo [Hhd, d]            (MP, DP)
+    mlp gate/up [d, ff]    (DP, MP)
+    mlp down [ff, d]       (MP, DP)
+    moe gate/up [E, d, f]  (MP, DP, ∅)  expert-parallel over model
+    moe down [E, f, d]     (MP, ∅, DP)
+    moe router [d, E]      (DP, ∅)
+    mamba in_proj [d, P]   (DP, MP)
+    mamba out_proj [di,d]  (MP, DP)
+    1-D params             replicated
+Leading scan-stack dims get ∅ prepended automatically.
+
+The rules are chosen by a small analytic cost model (`choose_kv_spec`)
+where a choice exists (decode KV cache: shard heads vs sequence).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+MP = "model"
+
+# (path-suffix match, spec for the trailing (non-stacked) dims)
+_RULES: list[tuple[tuple[str, ...], tuple[Any, ...]]] = [
+    (("embed", "w"), (MP, "DP")),
+    (("lm_head", "w"), ("DP", MP)),
+    (("wq", "w"), ("DP", MP)),
+    (("wk", "w"), ("DP", MP)),
+    (("wv", "w"), ("DP", MP)),
+    (("wo", "w"), (MP, "DP")),
+    (("gate", "w"), ("DP", MP)),
+    (("up", "w"), ("DP", MP)),
+    (("down", "w"), (MP, "DP")),
+    (("router", "w"), ("DP", None)),
+    # moe expert tensors (no trailing 'w' — raw [E, ..] arrays)
+    (("mlp", "gate"), (MP, "DP", None)),
+    (("mlp", "up"), (MP, "DP", None)),
+    (("mlp", "down"), (MP, None, "DP")),
+    (("in_proj", "w"), ("DP", MP)),
+    (("out_proj", "w"), (MP, "DP")),
+    (("conv_w",), (None, MP)),
+]
+
+
+def _match(path: tuple[str, ...], suffix: tuple[str, ...]) -> bool:
+    return len(path) >= len(suffix) and tuple(path[-len(suffix):]) == suffix
+
+
+def pick_layout(cfg, mesh: Mesh) -> str:
+    """Analytic layout choice (the GraphPi idea applied to sharding: rank
+    candidate plans with a cost model instead of a fixed heuristic).
+
+    'tp2d'          params 2-D sharded (TP×FSDP)  — default
+    'dp_replicated' params replicated, batch over every axis — small
+                    models whose head count can't fill the model axis;
+                    TP would force GSPMD to all-reduce full attention
+                    score tensors (measured 1.6 TB/step on whisper-base).
+    """
+    m = mesh.shape[MP]
+    # replicated params+opt (16 B/param fp32 master + m + v + bf16) must fit
+    # comfortably under the 16 GB HBM budget
+    fits = cfg.param_count() * 16 < 6e9
+    heads_ok = cfg.n_heads == 0 or cfg.n_heads % m == 0
+    if fits and not heads_ok:
+        return "dp_replicated"
+    return "tp2d"
+
+
+def param_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh: Mesh,
+               layout: str = "tp2d") -> P:
+    if layout == "dp_replicated":
+        return P()
+    dp = dp_axes(mesh)
+
+    def sub(s):
+        return dp if s == "DP" else s
+
+    for suffix, spec in _RULES:
+        if _match(path, suffix):
+            spec = tuple(sub(s) for s in spec)
+            ndim = len(shape)
+            if len(spec) > ndim:      # smoke configs may drop dims — bail
+                return P()
+            pad = (None,) * (ndim - len(spec))   # scan-stack leading dims
+            full = pad + spec
+            # never shard a dim that isn't divisible by its axis size
+            sized = []
+            for dim, ax in zip(shape, full):
+                if ax is None:
+                    sized.append(None)
+                    continue
+                n = (
+                    int(np.prod([mesh.shape[a] for a in ax]))
+                    if isinstance(ax, tuple)
+                    else mesh.shape[ax]
+                )
+                sized.append(ax if dim % n == 0 else None)
+            return P(*sized)
+    return P()  # replicate 1-D / unmatched params
+
+
+def param_shardings(params_shape, mesh: Mesh, layout: str = "tp2d"):
+    """Tree of NamedShardings matching an eval_shape'd param tree."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_shape)
+
+    def key_names(kp):
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "name"):
+                out.append(str(k.name))
+            else:
+                out.append(str(k))
+        return tuple(out)
+
+    specs = [
+        NamedSharding(mesh, param_spec(key_names(kp), v.shape, mesh, layout))
+        for kp, v in flat
+    ]
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def opt_state_shardings(opt_shape, params_shardings, mesh: Mesh):
+    """m/v mirror the params; step is replicated."""
+    return {
+        "m": params_shardings,
+        "v": params_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+# ----------------------------------------------------------------- batch ---
+def _largest_dividing_axes(axes: tuple, dim: int, mesh: Mesh):
+    """Longest prefix-shrunk axis tuple whose size product divides `dim`.
+
+    §Perf iteration 1 (whisper-base prefill): the old rule demanded the
+    FULL axis product divide the batch and otherwise replicated it — a
+    global_batch=32 cell on 256 chips then did 16× redundant work per
+    device.  Dropping trailing axes until the product divides keeps the
+    batch sharded as widely as the shape allows."""
+    axes = tuple(axes)
+    while axes:
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % n == 0 and n > 1:
+            return axes, n
+        axes = axes[:-1]
+    return None, 1
+
+
+def batch_specs(batch_shape, mesh: Mesh, layout: str = "tp2d"):
+    """Shard every batch leaf over the widest dividing data-axis tuple
+    (dim 0); with dp_replicated layout the model axis carries batch too."""
+    dp = dp_axes(mesh)
+    if layout == "dp_replicated":
+        dp = tuple(mesh.axis_names)
+    dp = dp if isinstance(dp, tuple) else (dp,)
+
+    def spec(v):
+        if not v.shape or v.shape[0] <= 1:
+            return NamedSharding(mesh, P())
+        axes, n = _largest_dividing_axes(dp, v.shape[0], mesh)
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(axes, *([None] * (len(v.shape) - 1))))
+
+    return jax.tree.map(spec, batch_shape)
+
+
+# -------------------------------------------------------------- KV cache ---
+def choose_kv_spec(cfg, batch: int, seq: int, mesh: Mesh) -> P:
+    """Cache [..., B, S, K, hd]: shard B over DP when divisible; shard K
+    over model when K ≥ |model| (cheap, no softmax collectives), else
+    shard S over model (flash-decoding style — the partial-softmax
+    reductions cost one small all-reduce per layer but the cache fits).
+
+    Analytic rule: prefer the head shard iff K % |model| == 0."""
+    dp = dp_axes(mesh)
+    m = mesh.shape[MP]
+    ndp = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+    bspec = dp if batch % ndp == 0 and batch > 1 else None
+    K = max(cfg.n_kv_heads, 1)
+    if K % m == 0:
+        return P(bspec, None, MP, None)
+    if seq % m == 0:
+        return P(bspec, MP, None, None)
+    return P(bspec, None, None, None)
+
+
+def cache_shardings(cfg, cache_shape, batch: int, seq: int, mesh: Mesh):
+    kv = choose_kv_spec(cfg, batch, seq, mesh)
+
+    def spec(v):
+        ndim = len(v.shape)
+        if ndim >= 5 and v.shape[-1] == cfg.head_dim and v.shape[-3] == seq:
+            # [stack, B, S, K, hd]
+            return NamedSharding(mesh, P(*((None,) * (ndim - 4)), *kv))
+        if ndim >= 5 and v.shape[-2] == seq:
+            # encdec cross_kv [L, 2, B, S, K, hd] handled below
+            return NamedSharding(mesh, P())
+        # ssm states [stack, B, nh, hd, ds] / conv [stack, B, cw-1, cd]:
+        # shard batch over DP; heads/channels over model when divisible
+        dp = dp_axes(mesh)
+        ndpn = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+        bdim = 1 if ndim >= 2 else None
+        parts = [None] * ndim
+        if bdim is not None and v.shape[bdim] % ndpn == 0 and v.shape[bdim] > 1:
+            parts[bdim] = dp
+        if ndim >= 3 and v.shape[2] % mesh.shape[MP] == 0:
+            parts[2] = MP
+        return NamedSharding(mesh, P(*parts))
+
+    def spec_cross(v):  # [L, 2, B, S, K, hd]
+        dp = dp_axes(mesh)
+        ndpn = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+        parts = [None] * len(v.shape)
+        if v.shape[2] % ndpn == 0 and v.shape[2] > 1:
+            parts[2] = dp
+        if v.shape[3] % mesh.shape[MP] == 0:
+            parts[3] = MP
+        return NamedSharding(mesh, P(*parts))
+
+    out = {}
+    for k, v in cache_shape.items():
+        if k == "cross_kv":
+            out[k] = spec_cross(v)
+        else:
+            out[k] = jax.tree.map(spec, v)
+    return out

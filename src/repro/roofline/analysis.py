@@ -1,0 +1,204 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_global   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes_global   / (chips × HBM_bw)
+    collective = collective_bytes_g / (chips × link_bw)
+
+`compiled.cost_analysis()` reports the PER-DEVICE partitioned module, so
+global = per-device × chips and the formulas above reduce to
+per-device / per-chip-rate.  Collective bytes are not in cost_analysis —
+we parse the optimized HLO and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(async *-start variants included, *-done skipped).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+from ..launch.mesh import HW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# In scheduled (post-optimization) HLO the operand types are omitted, so we
+# parse the RESULT type:  %name = f32[2,64]{1,0} all-reduce(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[0-9,]*\][^)\s]*(?:,\s*[a-z0-9]+\[[0-9,]*\][^)\s]*)*\)?)\s*"
+    r"(all-reduce-start|all-gather-start|collective-permute-start|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind ICI bytes per device (ring model).
+
+    Using result shapes (operands are untyped in scheduled HLO):
+      all-reduce          ~ 2 × size      (reduce-scatter + all-gather ring)
+      all-gather          ~ size          (bytes landed per device)
+      reduce-scatter      ~ size × g      (input traverses the ring)
+      all-to-all          ~ size          ((g-1)/g of the payload crosses)
+      collective-permute  ~ size
+    """
+    out: dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        result_types, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        b = sum(
+            _shape_bytes(dt, dims)
+            for dt, dims in _SHAPE_RE.findall(result_types)
+        )
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else m.end()]
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else 2
+        factor = {"all-reduce": 2, "reduce-scatter": g}.get(kind, 1)
+        out[kind] = out.get(kind, 0) + b * factor
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict = field(default_factory=dict)
+    model_flops: float = 0.0          # 6·N·D (train) / 2·N·D (serve), global
+    peak_memory_bytes: float = 0.0    # from memory_analysis, per device
+    raw_cost_flops: float = 0.0       # cost_analysis aggregate (body-once)
+    raw_cost_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / HW["peak_flops_bf16"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / HW["ici_link_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the lower-bound step
+        time, counting only MODEL (useful) flops: how close the cell is to
+        'useful compute at peak'."""
+        if self.step_time_s == 0:
+            return 0.0
+        useful_per_chip = self.model_flops / self.chips
+        return (useful_per_chip / self.step_time_s) / HW["peak_flops_bf16"]
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+            step_time_s=self.step_time_s,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def analyze(arch, shape, mesh_name, chips, compiled, model_flops, *,
+            extra_flops_per_device: float = 0.0) -> Roofline:
+    """Terms from the trip-count-aware HLO parse (hlo_cost.py).
+
+    The raw cost_analysis aggregates count while bodies once, so a
+    scan-over-layers model under-reports by ~n_layers; we keep them in the
+    artifact for reference but the roofline uses the corrected walk."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    if hlo:
+        from .hlo_cost import HloCost
+
+        hc = HloCost(hlo)
+        flops = max(hc.flops(), raw_flops) + extra_flops_per_device
+        # NOT max() with raw_bytes: cost_analysis bills gathered tables /
+        # DUS buffers in full, which the slice-aware walk corrects.
+        nbytes = hc.hbm_bytes()
+        coll = hc.collective_bytes()
+    else:  # pragma: no cover
+        flops, nbytes, coll = raw_flops, raw_bytes, collective_bytes(hlo)
+    mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)
+            )
+    except Exception:
+        pass
+    r = Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        peak_memory_bytes=mem,
+        raw_cost_flops=raw_flops,
+        raw_cost_bytes=raw_bytes,
+    )
+    return r

@@ -1,0 +1,106 @@
+"""Attribution tool for the roofline walk: which HLO ops carry the bytes
+/ flops / collective traffic?  This is the dry-run "profiler" the §Perf
+hypothesis loop reads (no real-TPU trace exists in this container).
+
+    PYTHONPATH=src python -m repro.roofline.explain --arch granite-34b \
+        --shape decode_32k --mesh single --top 15
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass
+
+from .hlo_cost import _BODY_RE, _CALLS_RE, HloCost, type_bytes
+
+
+@dataclass
+class Contribution:
+    bytes_: float = 0.0
+    flops: float = 0.0
+    count: int = 0
+
+
+def attribute(hc: HloCost, comp_name: str | None = None, mult: float = 1.0,
+              out: dict[str, Contribution] | None = None, label: str = ""):
+    """Walk like hbm_bytes/flops but accumulate per-op-signature totals.
+
+    Signature = opcode + result type (fusions get their kind attr), so
+    repeated layers aggregate into one row."""
+    out = out if out is not None else defaultdict(Contribution)
+    comp_name = comp_name or hc.entry
+    comp = hc.comps.get(comp_name)
+    if comp is None:
+        return out
+    for op in comp.ops:
+        if op.opcode == "while":
+            b = _BODY_RE.search(op.attrs)
+            if b:
+                attribute(hc, b.group(1), mult * hc._trips(op), out, label)
+            continue
+        if op.opcode in hc.__class__.__dict__.get("_noop", ()) :
+            continue
+        from .hlo_cost import _DONE, _SKIP_BYTES_OPS
+
+        if op.opcode in _SKIP_BYTES_OPS or op.opcode in _DONE:
+            continue
+        kind = op.opcode
+        if op.opcode == "fusion":
+            km = re.search(r"kind=(\w+)", op.attrs)
+            kind = f"fusion[{km.group(1) if km else '?'}]"
+        sig = f"{kind} -> {op.type_str[:64]}"
+        c = out[sig]
+        c.count += int(mult)
+        c.bytes_ += mult * (hc._result_write_bytes(comp, op)
+                            + hc._operand_read_bytes(comp, op))
+        if op.opcode == "dot":
+            c.flops += mult * hc._dot_flops(comp, op)
+        elif op.opcode == "fusion":
+            cc = _CALLS_RE.search(op.attrs)
+            if cc:
+                c.flops += mult * hc.flops(cc.group(1))
+    return out
+
+
+def explain(hlo_text: str, top: int = 20) -> str:
+    hc = HloCost(hlo_text)
+    contrib = attribute(hc)
+    total_b = sum(c.bytes_ for c in contrib.values())
+    total_f = sum(c.flops for c in contrib.values())
+    lines = [f"total bytes={total_b:.3e}  total flops={total_f:.3e}",
+             f"{'bytes':>12s} {'%':>6s} {'flops':>12s} {'n':>6s}  op"]
+    for sig, c in sorted(contrib.items(), key=lambda kv: -kv[1].bytes_)[:top]:
+        lines.append(
+            f"{c.bytes_:12.3e} {100 * c.bytes_ / max(total_b, 1):6.2f} "
+            f"{c.flops:12.3e} {c.count:6d}  {sig}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    # late import so XLA_FLAGS from dryrun applies first
+    from ..launch import dryrun
+
+    mesh_obj = None
+    from ..launch.mesh import make_production_mesh
+
+    mesh_obj = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    if args.arch == "graphpi":
+        compiled, _ = dryrun.lower_graphpi(mesh_obj, args.mesh)
+    else:
+        compiled, _ = dryrun.lower_cell(args.arch, args.shape, mesh_obj,
+                                        args.mesh)
+    print(explain(compiled.as_text(), args.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,351 @@
+"""Trip-count-aware cost extraction from scheduled HLO text.
+
+XLA's `compiled.cost_analysis()` counts every `while` body ONCE — a
+scan-over-layers model therefore under-reports flops/bytes by ~n_layers.
+This module parses the optimized HLO, builds the computation call graph,
+and multiplies through `known_trip_count` backend configs:
+
+    flops(comp)  = Σ dot-flops(op)            (2 · numel(result) · K)
+                 + Σ fusion → flops(called)
+                 + Σ while  → trips × flops(body)
+    hbm(comp)    = Σ (result + operand bytes) at fusion/op granularity
+                   (fusion internals excluded: only materialized
+                   boundaries touch HBM)
+    colls(comp)  = collective result bytes × ring-model factor, with the
+                   same trip multipliers.
+
+Elementwise flops are ignored (dot-dominated workloads; documented).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?(%?[\w.\-]+)\s*\((.*)\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+_DONE = {"all-reduce-done", "all-gather-done", "collective-permute-done"}
+
+
+def type_bytes(type_str: str) -> int:
+    return sum(
+        _nelem(dims) * _DTYPE_BYTES.get(dt, 4)
+        for dt, dims in _SHAPE_RE.findall(type_str)
+    )
+
+
+def _nelem(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    args: list[str]
+    attrs: str
+    arg_text: str = ""        # raw text inside the call parens
+
+
+@dataclass
+class Computation:
+    name: str
+    types: dict[str, str] = field(default_factory=dict)   # %name -> type
+    ops: list[Op] = field(default_factory=list)
+
+    def param_names(self) -> list[str]:
+        """Parameter op names ordered by their parameter(i) index."""
+        ps = []
+        for op in self.ops:
+            if op.opcode == "parameter":
+                try:
+                    idx = int(op.arg_text.strip())
+                except ValueError:
+                    idx = len(ps)
+                ps.append((idx, op.name))
+        return [name for _, name in sorted(ps)]
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and ("=" not in line.split("(")[0]):
+            name = h.group(2)
+            if not name.startswith("%"):
+                name = "%" + name
+            cur = Computation(name)
+            comps[name] = cur
+            if h.group(1):
+                entry = name
+            # parameters: "a.1: f32[2,3]{1,0}, b: (f32[], s32[2])"
+            params = h.group(3)
+            for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|[^,()]+)",
+                                  params):
+                cur.types["%" + pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        rest = line[m.end():]
+        arg_str = rest.split(")")[0]
+        args = re.findall(r"%[\w.\-]+", arg_str)
+        attrs = rest[len(arg_str):]
+        op = Op(name, type_str, opcode, args, attrs, arg_text=arg_str)
+        cur.types[name] = type_str
+        cur.ops.append(op)
+    return comps, entry
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._flops: dict[str, float] = {}
+        self._bytes: dict[str, float] = {}
+        self._colls: dict[str, dict[str, float]] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out_elems = _nelem(_SHAPE_RE.search(op.type_str).group(2)) \
+            if _SHAPE_RE.search(op.type_str) else 0
+        lhs_type = comp.types.get(op.args[0], "") if op.args else ""
+        lhs_dims = _shape_dims(lhs_type)
+        m = _LHS_C_RE.search(op.attrs)
+        k = 1
+        if m and lhs_dims:
+            for d in m.group(1).split(","):
+                if d:
+                    k *= lhs_dims[int(d)]
+        return 2.0 * out_elems * k
+
+    def _cc_flops(self, comp: Computation, op: Op) -> float:
+        if "matmul" not in op.attrs and "dot" not in op.attrs:
+            return 0.0
+        out = _nelem(_SHAPE_RE.search(op.type_str).group(2)) \
+            if _SHAPE_RE.search(op.type_str) else 0
+        lhs = _shape_dims(comp.types.get(op.args[0], "")) if op.args else []
+        k = lhs[-1] if lhs else 1
+        return 2.0 * out * k
+
+    def _trips(self, op: Op) -> float:
+        m = _TRIP_RE.search(op.attrs)
+        return float(m.group(1)) if m else 1.0
+
+    # ----------------------------------------------------------- recursion
+    def flops(self, comp_name: str | None = None) -> float:
+        comp_name = comp_name or self.entry
+        if comp_name in self._flops:
+            return self._flops[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        self._flops[comp_name] = 0.0  # cycle guard
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                out = _nelem(_SHAPE_RE.search(op.type_str).group(2)) \
+                    if _SHAPE_RE.search(op.type_str) else 0
+                rhs = _shape_dims(comp.types.get(op.args[1], "")) \
+                    if len(op.args) > 1 else []
+                import numpy as _np
+                total += 2.0 * out * (float(_np.prod(rhs[1:])) if rhs else 1.0)
+            elif op.opcode == "custom-call":
+                total += self._cc_flops(comp, op)
+            elif op.opcode == "fusion":
+                c = _CALLS_RE.search(op.attrs)
+                if c:
+                    total += self.flops(c.group(1))
+            elif op.opcode == "while":
+                b = _BODY_RE.search(op.attrs)
+                if b:
+                    total += self._trips(op) * self.flops(b.group(1))
+            elif op.opcode in ("call", "async-start"):
+                c = _CALLS_RE.search(op.attrs) or _BODY_RE.search(op.attrs)
+                if c:
+                    total += self.flops(c.group(1))
+            elif op.opcode == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}",
+                                     op.attrs)
+                if branches:
+                    names = re.findall(r"%[\w.\-]+", branches.group(1))
+                    total += max((self.flops(n) for n in names), default=0.0)
+        self._flops[comp_name] = total
+        return total
+
+    # ------------------------------------------------------ sliced access
+    _SLICED_READ = {"gather", "dynamic-slice"}
+
+    def _operand_read_bytes(self, comp: Computation, op: Op) -> float:
+        """Bytes READ for `op`'s operands, slice-aware.
+
+        A fusion (or top-level op) whose operand is used ONLY as the table
+        of gather/dynamic-slice ops does not stream the whole table from
+        HBM — it reads ~the gathered window.  Same for the in-place buffer
+        of dynamic-update-slice (XLA aliases it; only the updated window is
+        written, nothing else is read).  Without this, an embedding-table
+        gather (or a KV-cache update) is billed the full table every layer
+        — 10-100× overcounts on decode graphs.
+        """
+        reads = 0.0
+        called = None
+        if op.opcode == "fusion":
+            c = _CALLS_RE.search(op.attrs)
+            called = self.comps.get(c.group(1)) if c else None
+        for i, a in enumerate(op.args):
+            full = type_bytes(comp.types.get(a, ""))
+            if called is not None:
+                pnames = called.param_names()
+                if i < len(pnames):
+                    pname = pnames[i]
+                    uses = [u for u in called.ops if pname in u.args]
+                    if uses and all(
+                        u.opcode in self._SLICED_READ and u.args
+                        and u.args[0] == pname
+                        for u in uses
+                    ):
+                        reads += min(
+                            sum(type_bytes(u.type_str) for u in uses), full
+                        )
+                        continue
+                    if uses and all(
+                        u.opcode == "dynamic-update-slice" and u.args
+                        and u.args[0] == pname
+                        for u in uses
+                    ):
+                        continue  # aliased in-place target: no read
+            elif op.opcode in self._SLICED_READ and i == 0:
+                reads += min(type_bytes(op.type_str), full)
+                continue
+            elif op.opcode == "dynamic-update-slice" and i == 0:
+                continue
+            reads += full
+        return reads
+
+    def _result_write_bytes(self, comp: Computation, op: Op) -> float:
+        """Bytes WRITTEN for `op`'s result, DUS-aware: a (fusion ending in)
+        dynamic-update-slice writes the update window, not the buffer."""
+        if op.opcode == "dynamic-update-slice" and len(op.args) >= 2:
+            return type_bytes(comp.types.get(op.args[1], op.type_str))
+        if op.opcode == "fusion":
+            c = _CALLS_RE.search(op.attrs)
+            called = self.comps.get(c.group(1)) if c else None
+            if called is not None and called.ops:
+                root = called.ops[-1]
+                if root.opcode == "dynamic-update-slice" and len(root.args) >= 2:
+                    return type_bytes(called.types.get(root.args[1],
+                                                       op.type_str))
+        return type_bytes(op.type_str)
+
+    def hbm_bytes(self, comp_name: str | None = None) -> float:
+        comp_name = comp_name or self.entry
+        if comp_name in self._bytes:
+            return self._bytes[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        self._bytes[comp_name] = 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "while":
+                b = _BODY_RE.search(op.attrs)
+                if b:
+                    total += self._trips(op) * self.hbm_bytes(b.group(1))
+                continue
+            if op.opcode == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}",
+                                     op.attrs)
+                if branches:
+                    names = re.findall(r"%[\w.\-]+", branches.group(1))
+                    total += max((self.hbm_bytes(n) for n in names),
+                                 default=0.0)
+                continue
+            if op.opcode in _SKIP_BYTES_OPS or op.opcode in _DONE:
+                continue
+            # fusion boundary (or plain op): result + operands touch HBM
+            total += self._result_write_bytes(comp, op)
+            total += self._operand_read_bytes(comp, op)
+        self._bytes[comp_name] = total
+        return total
+
+    def collective_bytes(self, comp_name: str | None = None) -> dict[str, float]:
+        comp_name = comp_name or self.entry
+        if comp_name in self._colls:
+            return self._colls[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return {}
+        self._colls[comp_name] = {}
+        out: dict[str, float] = {}
+
+        def add(kind, b, mult=1.0):
+            out[kind] = out.get(kind, 0.0) + b * mult
+
+        for op in comp.ops:
+            if op.opcode in _COLLECTIVES:
+                kind = op.opcode.replace("-start", "")
+                b = type_bytes(op.type_str)
+                gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.attrs)
+                g = int(gm.group(2)) if gm else 2
+                factor = {"all-reduce": 2.0, "reduce-scatter": float(g)}.get(
+                    kind, 1.0
+                )
+                add(kind, b * factor)
+            elif op.opcode == "while":
+                b = _BODY_RE.search(op.attrs)
+                if b:
+                    for k, v in self.collective_bytes(b.group(1)).items():
+                        add(k, v, self._trips(op))
+            elif op.opcode in ("fusion", "call"):
+                c = _CALLS_RE.search(op.attrs)
+                if c:
+                    for k, v in self.collective_bytes(c.group(1)).items():
+                        add(k, v)
+        self._colls[comp_name] = out
+        return out

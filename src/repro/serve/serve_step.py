@@ -1,0 +1,86 @@
+"""Sharded serving steps: prefill and single-token decode.
+
+Decode KV caches are sharded by `parallel.sharding.choose_kv_spec`:
+heads over `model` when divisible, else sequence over `model`
+(flash-decoding style partial softmax — required for the MQA/GQA configs
+whose kv_heads < |model|)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import transformer as T
+from ..parallel.sharding import (
+    batch_specs, cache_shardings, param_shardings, pick_layout,
+)
+from ..train.train_step import abstract_params
+
+
+def cast_params_for_serving(params, dtype=jnp.bfloat16):
+    """Cast fp32 master weights (ndim ≥ 2) to the serving compute dtype.
+
+    §Perf: serving steps were all-gathering FP32 masters and converting
+    per layer per step; casting up-front inside the jitted step makes the
+    convert local+sharded and halves every parameter all-gather.  The MoE
+    router stays fp32 (routing decisions are precision-sensitive)."""
+
+    def one(path, v):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if "router" in names:
+            return v
+        if v.dtype == jnp.float32 and v.ndim >= 2:
+            return v.astype(dtype)
+        return v
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def make_prefill(cfg, mesh, batch_shape, *, q_chunk: int = 1024,
+                 cast_bf16: bool = True):
+    layout = pick_layout(cfg, mesh)
+    p_shape = abstract_params(cfg)
+    p_sh = param_shardings(p_shape, mesh, layout)
+    b_sh = batch_specs(batch_shape, mesh, layout)
+    base = T.prefill_fn(cfg, q_chunk=q_chunk)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def fn(params, batch):
+        if cast_bf16:
+            params = cast_params_for_serving(params, dtype)
+        return base(params, batch)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=None)
+    return jitted, p_sh, b_sh
+
+
+def make_decode(cfg, mesh, *, batch: int, max_seq: int,
+                cache_dtype=jnp.bfloat16, cast_bf16: bool = True):
+    """Returns (jitted_step, shardings...) for one decode step.
+
+    step(params, tokens [B,1], cache, pos) -> (logits [B,V], cache)"""
+    layout = pick_layout(cfg, mesh)
+    p_shape = abstract_params(cfg)
+    p_sh = param_shardings(p_shape, mesh, layout)
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_seq, dtype=cache_dtype)
+    )
+    c_sh = cache_shardings(cfg, cache_shape, batch, max_seq, mesh)
+    tok_sh = batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}, mesh
+    )["tokens"]
+    base = T.decode_fn(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def fn(params, tokens, cache, pos):
+        if cast_bf16:
+            params = cast_params_for_serving(params, dtype)
+        return base(params, tokens, cache, pos)
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_sh, tok_sh, c_sh, NamedSharding(mesh, P())),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+    return jitted, p_sh, c_sh, cache_shape

@@ -1,0 +1,55 @@
+"""Gradient compression for the DP all-reduce (int8 + error feedback).
+
+At 1000+ nodes the data-parallel gradient all-reduce is the dominant
+cross-pod collective.  This module provides an int8 per-tensor-scaled
+quantizer with error feedback (residual carried between steps), exposed
+as a shard_map-compatible reduce.  It is OFF by default; train_step can
+enable it for the cross-pod axis only (gradients inside a pod stay bf16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, scale=None):
+    x32 = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(tree, axis_name: str, error_state=None):
+    """int8-compressed psum with error feedback.
+
+    error_state: pytree like `tree` carrying the quantization residual
+    from the previous step (or None).  Returns (reduced, new_error)."""
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda v: jnp.zeros_like(v, dtype=jnp.float32), tree
+        )
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        new_e = g32 - deq
+        # the int8 payload is what crosses the (slow) axis; scales are
+        # tiny fp32 scalars
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        s = jax.lax.pmax(scale, axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (total.astype(jnp.float32) * s / n).astype(g.dtype), new_e
+
+    flat, tdef = jax.tree.flatten(tree)
+    flat_e = tdef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        tdef.unflatten([o[1] for o in out]),
+    )

@@ -1,0 +1,109 @@
+"""Sharded train-step construction (pjit): loss+grad → AdamW update.
+
+Features: microbatch gradient accumulation (lax.scan), activation remat,
+query-chunked attention, sequence-chunked loss, donated params/opt-state,
+2-D (TP×FSDP) sharded params and fully-sharded optimizer state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import transformer as T
+from ..parallel.sharding import (
+    batch_specs, dp_axes, opt_state_shardings, param_shardings, pick_layout,
+)
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    remat: bool = True
+    q_chunk: int = 1024          # query chunking for long-seq attention
+    loss_chunk: int = 1024       # sequence chunking for the vocab softmax
+    accum_steps: int = 1         # microbatch gradient accumulation
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda k: T.init(cfg, k), jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, mesh, opts: TrainOptions,
+                    batch_shape):
+    """Returns (jitted_step, params_sh, opt_sh, batch_sh).
+
+    jitted_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    loss = T.loss_fn(
+        cfg, remat=opts.remat,
+        q_chunk=(opts.q_chunk if _needs_chunk(cfg, batch_shape, opts) else 0),
+        loss_chunk=opts.loss_chunk,
+    )
+
+    def grads_of(params, batch):
+        if opts.accum_steps <= 1:
+            (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(
+                params, batch
+            )
+            return l, metrics, g
+        # microbatch accumulation over the leading batch dim
+        A = opts.accum_steps
+
+        def split(x):
+            return x.reshape((A, x.shape[0] // A) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, tot = carry
+            (l, _m), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, tot + l), ()
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, tot), _ = jax.lax.scan(body, (zero, jnp.zeros(())), micro)
+        g = jax.tree.map(lambda x: x / A, g)
+        l = tot / A
+        return l, {"loss": l, "tokens": jnp.zeros(())}, g
+
+    def step(params, opt_state, batch):
+        l, metrics, g = grads_of(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, g, opt_state, params)
+        return params, opt_state, {**metrics, **om}
+
+    layout = pick_layout(cfg, mesh)
+    p_shape = abstract_params(cfg)
+    p_sh = param_shardings(p_shape, mesh, layout)
+    o_shape = jax.eval_shape(init_opt_state, p_shape)
+    o_sh = opt_state_shardings(o_shape, p_sh, mesh)
+    b_sh = batch_specs(batch_shape, mesh, layout)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, p_sh, o_sh, b_sh
+
+
+def _needs_chunk(cfg, batch_shape, opts):
+    leaf = batch_shape.get("tokens", batch_shape.get("embeds"))
+    S = leaf.shape[1]
+    return bool(opts.q_chunk) and S >= 2 * opts.q_chunk
+
+
+def init_sharded(cfg, mesh, seed: int = 0):
+    """Initialize params/opt-state directly into their shardings."""
+    p_shape = abstract_params(cfg)
+    p_sh = param_shardings(p_shape, mesh)
+    params = jax.jit(
+        lambda k: T.init(cfg, k), out_shardings=p_sh
+    )(jax.random.PRNGKey(seed))
+    o_shape = jax.eval_shape(init_opt_state, p_shape)
+    o_sh = opt_state_shardings(o_shape, p_sh, mesh)
+    opt_state = jax.jit(init_opt_state, out_shardings=o_sh)(params)
+    return params, opt_state, p_sh, o_sh

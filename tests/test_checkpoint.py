@@ -1,0 +1,105 @@
+"""Fault-tolerance substrate: atomic checkpoints, resume, elasticity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "p": {"w": jax.random.normal(k, (8, 16)),
+              "b": jnp.arange(16, dtype=jnp.float32)},
+        "o": {"m": jnp.zeros((8, 16)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t)
+    like = jax.eval_shape(lambda: t)
+    got, step = ckpt.restore(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_points_to_newest(tmp_path):
+    ckpt.save(str(tmp_path), 5, _tree(1))
+    ckpt.save(str(tmp_path), 10, _tree(2))
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    got, step = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: _tree()))
+    assert step == 10
+
+
+def test_restore_specific_step(tmp_path):
+    ckpt.save(str(tmp_path), 5, _tree(1))
+    ckpt.save(str(tmp_path), 10, _tree(2))
+    _, step = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: _tree()),
+                           step=5)
+    assert step == 5
+
+
+def test_atomic_no_partial_on_failure(tmp_path):
+    """A crashed save must not corrupt LATEST (tmp dir cleaned/ignored)."""
+    ckpt.save(str(tmp_path), 1, _tree(1))
+    # simulate a torn write: leave a stale tmp dir around
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_dead"), exist_ok=True)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    got, step = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: _tree()))
+    assert step == 1
+
+
+def test_elastic_resharding(tmp_path):
+    """Checkpoint written under one sharding restores under another
+    (different device count is simulated by a different PartitionSpec)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    sh = jax.tree.map(
+        lambda v: NamedSharding(mesh, P()), t,
+    )
+    got, step = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: t),
+                             shardings=sh)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_resume_continues_stream(tmp_path):
+    """End-to-end: train 4 steps, kill, resume → identical params to an
+    uninterrupted 8-step run (checkpoint + deterministic data pipeline)."""
+    from repro.launch.train import main as train_main
+
+    common = ["--arch", "qwen3-1.7b", "--smoke", "--batch", "2",
+              "--seq", "16", "--log-every", "100"]
+    d1 = str(tmp_path / "interrupted")
+    train_main(common + ["--steps", "4", "--ckpt-dir", d1,
+                         "--ckpt-every", "4"])
+    train_main(common + ["--steps", "8", "--ckpt-dir", d1,
+                         "--ckpt-every", "4"])
+    d2 = str(tmp_path / "straight")
+    train_main(common + ["--steps", "8", "--ckpt-dir", d2,
+                         "--ckpt-every", "8"])
+    a, sa = ckpt.restore(d1, None) if False else (None, None)
+    # compare the saved params directly
+    import json
+
+    def leaves(d):
+        man = json.load(open(os.path.join(d, "step_8", "manifest.json")))
+        return {
+            m["path"]: np.load(os.path.join(d, "step_8", m["file"]))
+            for m in man["leaves"]
+        }
+
+    l1, l2 = leaves(d1), leaves(d2)
+    assert l1.keys() == l2.keys()
+    for k in l1:
+        np.testing.assert_allclose(l1[k], l2[k], rtol=2e-5, atol=2e-6,
+                                   err_msg=k)

@@ -1,0 +1,135 @@
+import numpy as np
+import pytest
+
+from repro.core.config_search import graphzero_configuration, search_configuration
+from repro.core.executor import (
+    CountResult, ExecutorConfig, compute_stats, count_embeddings,
+)
+from repro.core.oracle import count_embeddings_oracle
+from repro.core.pattern import clique, cycle, house, rectangle, star, triangle
+from repro.core.plan import best_iep_k, build_plan
+from repro.core.restrictions import generate_restriction_sets
+from repro.core.schedule import generate_schedules
+from repro.graph.datasets import complete_graph, erdos_renyi, rmat
+
+CFG = ExecutorConfig(capacity=1 << 14)
+PATTERNS = [triangle(), rectangle(), house(), clique(4), cycle(5), star(4)]
+
+
+@pytest.fixture(scope="module")
+def er_graph():
+    return erdos_renyi(64, 420, seed=3)
+
+
+@pytest.fixture(scope="module")
+def rmat_graph():
+    return rmat(8, 6, seed=11)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS, ids=lambda p: p.name)
+def test_counts_match_oracle_er(er_graph, pattern):
+    want = count_embeddings_oracle(er_graph.n, er_graph.edge_array(), pattern)
+    order = generate_schedules(pattern)[0]
+    rs = generate_restriction_sets(pattern, max_sets=1)[0]
+    got = count_embeddings(er_graph, build_plan(pattern, order, rs), CFG)
+    assert not got.overflowed
+    assert got.count == want
+
+
+@pytest.mark.parametrize("pattern", PATTERNS, ids=lambda p: p.name)
+def test_counts_match_oracle_rmat(rmat_graph, pattern):
+    """Power-law graph exercises skewed windows + sentinel padding."""
+    want = count_embeddings_oracle(rmat_graph.n, rmat_graph.edge_array(), pattern)
+    order = generate_schedules(pattern)[0]
+    rs = generate_restriction_sets(pattern, max_sets=1)[0]
+    got = count_embeddings(rmat_graph, build_plan(pattern, order, rs), CFG)
+    assert got.count == want
+
+
+@pytest.mark.parametrize("pattern", PATTERNS, ids=lambda p: p.name)
+def test_iep_counts_match_enumeration(er_graph, pattern):
+    order = generate_schedules(pattern)[0]
+    rs = generate_restriction_sets(pattern, max_sets=1)[0]
+    k = best_iep_k(pattern, order, rs)
+    if k < 1:
+        pytest.skip("no sound IEP folding for this configuration")
+    plan = build_plan(pattern, order, rs, iep_k=k)
+    want = count_embeddings_oracle(er_graph.n, er_graph.edge_array(), pattern)
+    got = count_embeddings(er_graph, plan, CFG)
+    assert got.count == want
+
+
+def test_complete_graph_closed_form():
+    # K_10: #house = C(10,5) * 5!/|Aut| embeddings per 5-subset
+    g = complete_graph(10)
+    h = house()
+    order = generate_schedules(h)[0]
+    rs = generate_restriction_sets(h, max_sets=1)[0]
+    got = count_embeddings(g, build_plan(h, order, rs), CFG)
+    from math import comb, factorial
+    want = comb(10, 5) * factorial(5) // h.aut_count()
+    assert got.count == want
+
+
+def test_all_restriction_sets_agree(er_graph):
+    p = clique(4)
+    order = generate_schedules(p)[0]
+    counts = set()
+    for rs in generate_restriction_sets(p, max_sets=8):
+        counts.add(count_embeddings(er_graph, build_plan(p, order, rs), CFG).count)
+    assert len(counts) == 1
+
+
+def test_all_schedules_agree(er_graph):
+    p = house()
+    rs = generate_restriction_sets(p, max_sets=1)[0]
+    counts = set()
+    for order in generate_schedules(p)[:8]:
+        counts.add(count_embeddings(er_graph, build_plan(p, order, rs), CFG).count)
+    assert len(counts) == 1
+
+
+def test_capacity_overflow_recovers_by_bisection(er_graph):
+    """A tiny capacity must still give the right answer via host-side
+    chunk bisection (straggler/elasticity mechanism)."""
+    p = triangle()
+    order = (0, 1, 2)
+    rs = generate_restriction_sets(p, max_sets=1)[0]
+    small = ExecutorConfig(capacity=256)
+    got = count_embeddings(er_graph, build_plan(p, order, rs), small)
+    want = count_embeddings_oracle(er_graph.n, er_graph.edge_array(), p)
+    assert got.count == want
+
+
+def test_static_base_matches_dynamic(er_graph):
+    p = house()
+    order = generate_schedules(p)[0]
+    rs = generate_restriction_sets(p, max_sets=1)[0]
+    plan = build_plan(p, order, rs)
+    a = count_embeddings(er_graph, plan, ExecutorConfig(capacity=1 << 14, dynamic_base=True))
+    b = count_embeddings(er_graph, plan, ExecutorConfig(capacity=1 << 14, dynamic_base=False))
+    assert a.count == b.count
+
+
+def test_compute_stats_triangle_count(er_graph):
+    stats = compute_stats(er_graph)
+    assert stats.tri_cnt == er_graph.triangle_count_numpy()
+    assert stats.n_vertices == er_graph.n
+    assert stats.n_edges == er_graph.m
+
+
+def test_search_configuration_end_to_end(er_graph):
+    stats = compute_stats(er_graph)
+    res = search_configuration(house(), stats, use_iep=True)
+    plan = res.plan(house())
+    got = count_embeddings(er_graph, plan, CFG)
+    want = count_embeddings_oracle(er_graph.n, er_graph.edge_array(), house())
+    assert got.count == want
+    # the chosen config must be the cheapest among all candidates ranked
+    assert res.best.predicted_cost == min(
+        c.predicted_cost for c in res.all_configs
+    )
+    # the GraphZero-style baseline still counts correctly
+    gz = graphzero_configuration(house(), stats)
+    gz_plan = build_plan(house(), gz.order, gz.res_set, iep_k=gz.iep_k)
+    assert count_embeddings(er_graph, gz_plan, CFG).count == want

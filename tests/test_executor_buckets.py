@@ -1,0 +1,83 @@
+"""Degree-bucketed frontier expansion (§Perf, graphpi cell) vs oracle."""
+import numpy as np
+import pytest
+
+from repro.core.executor import (
+    ExecutorConfig, Matcher, auto_buckets, count_embeddings,
+)
+from repro.core.oracle import count_embeddings_oracle
+from repro.core.pattern import clique, cycle, house, star
+from repro.core.plan import best_iep_k, build_plan
+from repro.core.restrictions import generate_restriction_sets
+from repro.core.schedule import generate_schedules
+from repro.graph.datasets import erdos_renyi, rmat
+
+
+@pytest.fixture(scope="module")
+def graph():
+    # small power-law graph: heavy-tailed degrees make bucketing matter
+    return rmat(8, 6, seed=7, name="rmat8")
+
+
+@pytest.fixture(scope="module")
+def er():
+    return erdos_renyi(128, 768, seed=3)
+
+
+def _plan(pattern, iep=False):
+    rs = generate_restriction_sets(pattern, max_sets=1)[0]
+    order = generate_schedules(pattern)[0]
+    k = best_iep_k(pattern, order, rs) if iep else 0
+    return build_plan(pattern, order, rs, iep_k=k)
+
+
+PATTERNS = [house(), cycle(4), clique(3), star(4)]
+
+
+@pytest.mark.parametrize("pattern", PATTERNS, ids=lambda p: p.name)
+@pytest.mark.parametrize("iep", [False, True], ids=["enum", "iep"])
+def test_bucketed_matches_oracle(graph, pattern, iep):
+    plan = _plan(pattern, iep=iep)
+    expect = count_embeddings_oracle(graph.n, graph.edge_array(), pattern)
+    cfg = ExecutorConfig(capacity=1 << 12,
+                         degree_buckets=auto_buckets(graph))
+    got = Matcher(graph, plan, cfg).count()
+    assert not got.overflowed
+    assert got.count == expect
+
+
+@pytest.mark.parametrize("buckets", [
+    ((8, 1.0), (10**9, 0.5)),
+    ((4, 1.0), (16, 0.5), (10**9, 0.25)),
+    ((2, 0.5), (10**9, 1.0)),
+], ids=["two", "three", "tiny-first"])
+def test_bucket_layout_invariance(er, buckets):
+    """Any bucket layout must give the same exact count."""
+    plan = _plan(house())
+    base = count_embeddings(er, plan, ExecutorConfig(capacity=1 << 12))
+    got = Matcher(er, plan,
+                  ExecutorConfig(capacity=1 << 12,
+                                 degree_buckets=buckets)).count()
+    assert got.count == base.count
+    assert not got.overflowed
+
+
+def test_bucket_overflow_escalates(er):
+    """Deliberately tiny bucket fractions force capacity escalation; the
+    count must stay exact."""
+    plan = _plan(house())
+    expect = count_embeddings_oracle(er.n, er.edge_array(), house())
+    cfg = ExecutorConfig(capacity=1 << 9,
+                         degree_buckets=((8, 1 / 32), (10**9, 1 / 32)))
+    got = Matcher(er, plan, cfg).count()
+    assert got.count == expect
+    assert not got.overflowed
+
+
+def test_auto_buckets_shape(graph):
+    b = auto_buckets(graph)
+    if b is not None:
+        widths = [w for w, _ in b]
+        assert widths == sorted(widths)
+        assert widths[-1] >= graph.max_degree
+        assert all(0 < f <= 1.0 for _, f in b)

@@ -1,0 +1,37 @@
+"""End-to-end launcher smoke tests (the public CLI surface)."""
+import pytest
+
+
+def test_mine_end_to_end_graphpi_mode():
+    from repro.launch.mine import main
+
+    rc = main(["--pattern", "P1", "--dataset", "tiny-er", "--verify",
+               "--capacity", str(1 << 14), "--single-device"])
+    assert rc == 0
+
+
+def test_mine_graphzero_and_naive_agree():
+    from repro.launch.mine import main
+
+    assert main(["--pattern", "P4", "--dataset", "tiny-er",
+                 "--mode", "graphzero", "--verify", "--single-device"]) == 0
+    assert main(["--pattern", "P4", "--dataset", "tiny-er",
+                 "--mode", "naive", "--verify", "--single-device"]) == 0
+
+
+def test_serve_launcher_smoke():
+    from repro.launch.serve import main
+
+    rc = main(["--arch", "qwen3-1.7b", "--smoke", "--batch", "2",
+               "--prompt-len", "16", "--gen", "4"])
+    assert rc == 0
+
+
+def test_train_launcher_smoke(tmp_path):
+    from repro.launch.train import main
+
+    rc = main(["--arch", "mamba2-370m", "--smoke", "--steps", "3",
+               "--batch", "2", "--seq", "16",
+               "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+               "--log-every", "1"])
+    assert rc == 0

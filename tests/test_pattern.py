@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+
+from repro.core.pattern import (
+    Pattern, clique, cycle, house, path, perm_to_cycles, rectangle, star,
+    triangle, two_cycles_of,
+)
+
+
+def test_aut_counts():
+    assert triangle().aut_count() == 6
+    assert rectangle().aut_count() == 8
+    assert house().aut_count() == 2
+    assert clique(4).aut_count() == 24
+    assert clique(5).aut_count() == 120
+    assert cycle(5).aut_count() == 10       # dihedral D5
+    assert cycle(6).aut_count() == 12
+    assert path(4).aut_count() == 2
+    assert star(5).aut_count() == 24        # 4 leaves permute
+
+
+def test_seven_clique_has_5040_automorphisms():
+    # paper §II-B: "For a 7-clique pattern each embedding has 5,040
+    # automorphisms"
+    assert clique(7).aut_count() == 5040
+
+
+def test_cycle_decomposition():
+    p = (0, 3, 2, 1)           # (B,D) swap of the rectangle example
+    cyc = perm_to_cycles(p)
+    assert sorted(map(len, cyc)) == [1, 1, 2]
+    assert two_cycles_of(p) == [(1, 3)]
+
+
+def test_relabel_preserves_structure():
+    h = house()
+    r = h.relabel((4, 3, 2, 1, 0))
+    assert r.m == h.m
+    assert r.aut_count() == h.aut_count()
+
+
+def test_max_independent_set():
+    assert clique(5).max_independent_set_size() == 1
+    assert rectangle().max_independent_set_size() == 2
+    assert star(5).max_independent_set_size() == 4
+    assert cycle(6).max_independent_set_size() == 3
+
+
+def test_invalid_patterns_rejected():
+    with pytest.raises(ValueError):
+        Pattern(3, ((0, 0),))
+    with pytest.raises(ValueError):
+        Pattern(3, ((0, 1), (1, 0)))
+    with pytest.raises(ValueError):
+        Pattern(2, ((0, 5),))
+
+
+def test_connectivity():
+    assert house().is_connected()
+    assert not Pattern(4, ((0, 1), (2, 3))).is_connected()

@@ -1,0 +1,73 @@
+import numpy as np
+import pytest
+
+from repro.core.pattern import clique, house, triangle
+from repro.core.perf_model import (
+    GraphStats, filter_probabilities, intersection_cardinality,
+    loop_cardinalities, predict_cost,
+)
+from repro.core.restrictions import generate_restriction_sets
+from repro.core.schedule import generate_schedules
+
+STATS = GraphStats(n_vertices=1000, n_edges=5000, tri_cnt=700)
+
+
+def test_probabilities_match_paper_formulas():
+    assert STATS.p1 == pytest.approx(2 * 5000 / 1000**2)
+    assert STATS.p2 == pytest.approx(700 * 1000 / (2 * 5000) ** 2)
+    assert STATS.avg_degree == pytest.approx(10.0)
+
+
+def test_cardinality_estimates():
+    # single neighborhood = average degree
+    assert intersection_cardinality(STATS, 1) == pytest.approx(10.0)
+    # m neighborhoods = |V| p1 p2^(m-1)
+    assert intersection_cardinality(STATS, 2) == pytest.approx(
+        1000 * STATS.p1 * STATS.p2
+    )
+    assert intersection_cardinality(STATS, 0) == 1000
+
+
+def test_filter_probability_halves_for_single_restriction():
+    # paper: a single id(A) > id(B) filters exactly half of all relative
+    # orders at its checkable loop
+    f = filter_probabilities(5, [(0, 1)], (0, 1, 2, 3, 4))
+    assert f[1] == pytest.approx(0.5)
+    assert all(x == 0 for i, x in enumerate(f) if i != 1)
+
+
+def test_filter_probabilities_sequential():
+    # two chained restrictions: second filters among survivors of first
+    f = filter_probabilities(3, [(0, 1), (1, 2)], (0, 1, 2))
+    # id0>id1 kills 1/2; among survivors, id1>id2 keeps only the fully
+    # decreasing order: 1/3 survive
+    assert f[1] == pytest.approx(0.5)
+    assert f[2] == pytest.approx(2 / 3)
+
+
+def test_cost_positive_and_restriction_sensitive():
+    h = house()
+    order = generate_schedules(h)[0]
+    rs = generate_restriction_sets(h, max_sets=4)
+    costs = [predict_cost(h, order, r, STATS) for r in rs]
+    assert all(c > 0 for c in costs)
+    unrestricted = predict_cost(h, order, (), STATS)
+    assert all(c <= unrestricted for c in costs)
+
+
+def test_cost_ranks_good_schedules_cheaper():
+    """Dense-prefix schedules should beat sparse ones for triangle-rich
+    stats: the model must give *different* costs across schedules."""
+    h = house()
+    rs = generate_restriction_sets(h, max_sets=1)[0]
+    costs = {o: predict_cost(h, o, rs, STATS) for o in generate_schedules(h)}
+    assert len(set(round(c, 3) for c in costs.values())) > 1
+
+
+def test_iep_changes_cost():
+    h = house()
+    order = (0, 1, 2, 3, 4)
+    rs = generate_restriction_sets(h, max_sets=1)[0]
+    c0 = predict_cost(h, order, rs, STATS, iep_k=0)
+    c2 = predict_cost(h, order, rs, STATS, iep_k=2)
+    assert c0 != c2

@@ -1,0 +1,113 @@
+"""Hypothesis property tests over the system's core invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.executor import ExecutorConfig, count_embeddings
+from repro.core.oracle import count_embeddings_oracle, count_injective_maps
+from repro.core.pattern import Pattern, clique, cycle, house, rectangle, triangle
+from repro.core.plan import best_iep_k, build_plan
+from repro.core.restrictions import (
+    generate_restriction_sets, surviving_perms, validate,
+)
+from repro.core.schedule import generate_schedules
+from repro.graph.csr import GraphCSR
+
+CFG = ExecutorConfig(capacity=1 << 13)
+SLOW = settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def random_graphs(draw, max_n=24, max_m=80):
+    n = draw(st.integers(min_value=4, max_value=max_n))
+    m = draw(st.integers(min_value=0, max_value=max_m))
+    edges = draw(
+        st.lists(
+            st.tuples(
+                st.integers(0, n - 1), st.integers(0, n - 1)
+            ),
+            min_size=0,
+            max_size=m,
+        )
+    )
+    return n, np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+
+
+@st.composite
+def random_patterns(draw):
+    """Small connected patterns."""
+    n = draw(st.integers(min_value=3, max_value=5))
+    # random spanning tree + extra edges => connected
+    extra = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            max_size=4,
+        )
+    )
+    edges = set()
+    for i in range(1, n):
+        parent = draw(st.integers(0, i - 1))
+        edges.add((parent, i))
+    for (u, v) in extra:
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    return Pattern(n, tuple(sorted(edges)), name=f"rand{n}")
+
+
+@SLOW
+@given(random_patterns())
+def test_restriction_sets_always_complete(pattern):
+    """Invariant: every generated set leaves exactly the identity."""
+    auts = pattern.automorphisms()
+    ident = tuple(range(pattern.n))
+    sets = generate_restriction_sets(pattern, max_sets=8)
+    assert sets
+    for rs in sets:
+        assert surviving_perms(auts, rs) == [ident]
+        assert validate(pattern, rs)
+
+
+@SLOW
+@given(random_graphs(), random_patterns())
+def test_executor_count_matches_oracle(graph, pattern):
+    """Invariant: JAX count == oracle count on any graph, any pattern."""
+    n, edges = graph
+    g = GraphCSR.from_edges(n, edges)
+    if g.m == 0:
+        return
+    want = count_embeddings_oracle(n, g.edge_array(), pattern)
+    order = generate_schedules(pattern)[0]
+    rs = generate_restriction_sets(pattern, max_sets=1)[0]
+    got = count_embeddings(g, build_plan(pattern, order, rs), CFG)
+    assert got.count == want
+
+
+@SLOW
+@given(random_graphs(max_n=16, max_m=60), random_patterns())
+def test_iep_equals_enumeration(graph, pattern):
+    """Invariant: IEP-folded counting == plain enumeration."""
+    n, edges = graph
+    g = GraphCSR.from_edges(n, edges)
+    if g.m == 0:
+        return
+    order = generate_schedules(pattern)[0]
+    rs = generate_restriction_sets(pattern, max_sets=1)[0]
+    k = best_iep_k(pattern, order, rs)
+    if k < 1:
+        return
+    enum = count_embeddings(g, build_plan(pattern, order, rs), CFG)
+    iep = count_embeddings(g, build_plan(pattern, order, rs, iep_k=k), CFG)
+    assert iep.count == enum.count
+
+
+@SLOW
+@given(random_graphs(max_n=14, max_m=40), random_patterns())
+def test_injective_maps_are_aut_multiples(graph, pattern):
+    """Invariant: #injective maps ≡ 0 (mod |Aut|)."""
+    n, edges = graph
+    maps = count_injective_maps(n, edges, pattern)
+    assert maps % pattern.aut_count() == 0

@@ -1,0 +1,61 @@
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.pattern import clique, cycle, house, rectangle, star, triangle
+from repro.core.restrictions import (
+    count_orders_satisfying, first_restriction_set, generate_restriction_sets,
+    no_conflict, surviving_perms, validate,
+)
+
+PATTERNS = [triangle(), rectangle(), house(), clique(4), cycle(5), star(4)]
+
+
+@pytest.mark.parametrize("pattern", PATTERNS, ids=lambda p: p.name)
+def test_every_generated_set_is_complete(pattern):
+    """Each set must kill every non-identity automorphism (paper Alg. 1)."""
+    sets = generate_restriction_sets(pattern)
+    assert sets, "at least one restriction set must exist"
+    auts = pattern.automorphisms()
+    ident = tuple(range(pattern.n))
+    for rs in sets:
+        assert surviving_perms(auts, rs) == [ident]
+        assert validate(pattern, rs)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS, ids=lambda p: p.name)
+def test_kn_count_equals_orbit_count(pattern):
+    """On K_n: #embeddings == n!/|Aut| for every restriction set."""
+    n = pattern.n
+    n_fact = 1
+    for i in range(2, n + 1):
+        n_fact *= i
+    for rs in generate_restriction_sets(pattern, max_sets=16):
+        assert count_orders_satisfying(n, rs) * pattern.aut_count() == n_fact
+
+
+def test_multiple_distinct_sets_generated():
+    """The paper's key claim vs GraphZero: MULTIPLE sets per pattern."""
+    for pattern, lo in [(rectangle(), 2), (clique(4), 2), (cycle(5), 2)]:
+        sets = generate_restriction_sets(pattern)
+        assert len(set(map(frozenset, sets))) >= lo
+
+
+def test_no_conflict_example_from_paper():
+    """Fig. 4(d): after id(B)>id(D) and id(A)>id(C), the rotation
+    permutation (2) = (A,B,C,D) is eliminated."""
+    rot = (1, 2, 3, 0)  # A->B->C->D->A
+    rs = [(1, 3), (0, 2)]  # id(B) > id(D), id(A) > id(C)
+    assert not no_conflict(rot, rs)
+
+
+def test_identity_never_eliminated():
+    for pattern in PATTERNS:
+        ident = tuple(range(pattern.n))
+        for rs in generate_restriction_sets(pattern, max_sets=8):
+            assert no_conflict(ident, rs)
+
+
+def test_first_set_deterministic():
+    assert first_restriction_set(house()) == first_restriction_set(house())

@@ -1,0 +1,122 @@
+"""Roofline extraction: HLO parsing, trip counts, slice-aware bytes."""
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import HloCost, parse_module, type_bytes
+
+HLO = """
+HloModule test
+
+%fused_gather (param_0.1: f32[1000,64], param_1.2: s32[8]) -> f32[8,64] {
+  %param_0.1 = f32[1000,64]{1,0} parameter(0)
+  %param_1.2 = s32[8]{0} parameter(1)
+  ROOT %gather.1 = f32[8,64]{1,0} gather(%param_0.1, %param_1.2), offset_dims={1}
+}
+
+%fused_dus (param_0.3: f32[1000,64], param_1.4: f32[1,64], param_2.5: s32[]) -> f32[1000,64] {
+  %param_0.3 = f32[1000,64]{1,0} parameter(0)
+  %param_1.4 = f32[1,64]{1,0} parameter(1)
+  %param_2.5 = s32[] parameter(2)
+  %constant.1 = s32[] constant(0)
+  ROOT %dynamic-update-slice.1 = f32[1000,64]{1,0} dynamic-update-slice(%param_0.3, %param_1.4, %param_2.5, %constant.1)
+}
+
+%body (param.1: (s32[], f32[128,256], f32[256,128])) -> (s32[], f32[128,256], f32[256,128]) {
+  %param.1 = (s32[], f32[128,256], f32[256,128]) parameter(0)
+  %get-tuple-element.1 = s32[] get-tuple-element(%param.1), index=0
+  %get-tuple-element.2 = f32[128,256]{1,0} get-tuple-element(%param.1), index=1
+  %get-tuple-element.3 = f32[256,128]{1,0} get-tuple-element(%param.1), index=2
+  %dot.1 = f32[128,128]{1,0} dot(%get-tuple-element.2, %get-tuple-element.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-reduce.1 = f32[128,128]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %tuple.1 = (s32[], f32[128,256], f32[256,128]) tuple(%get-tuple-element.1, %get-tuple-element.2, %get-tuple-element.3)
+}
+
+%cond (param.2: (s32[], f32[128,256], f32[256,128])) -> pred[] {
+  %param.2 = (s32[], f32[128,256], f32[256,128]) parameter(0)
+  %get-tuple-element.4 = s32[] get-tuple-element(%param.2), index=0
+  %constant.2 = s32[] constant(10)
+  ROOT %compare.1 = pred[] compare(%get-tuple-element.4, %constant.2), direction=LT
+}
+
+ENTRY %main (p0: f32[1000,64], p1: s32[8], p2: f32[1,64], p3: (s32[], f32[128,256], f32[256,128])) -> f32[1000,64] {
+  %p0 = f32[1000,64]{1,0} parameter(0)
+  %p1 = s32[8]{0} parameter(1)
+  %p2 = f32[1,64]{1,0} parameter(2)
+  %p3 = (s32[], f32[128,256], f32[256,128]) parameter(3)
+  %fusion.1 = f32[8,64]{1,0} fusion(%p0, %p1), kind=kLoop, calls=%fused_gather
+  %while.1 = (s32[], f32[128,256], f32[256,128]) while(%p3), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %constant.3 = s32[] constant(5)
+  ROOT %fusion.2 = f32[1000,64]{1,0} fusion(%p0, %p2, %constant.3), kind=kLoop, calls=%fused_dus
+}
+"""
+
+
+@pytest.fixture(scope="module")
+def hc():
+    return HloCost(HLO)
+
+
+def test_parse_finds_computations(hc):
+    assert "%main" in hc.comps
+    assert hc.entry == "%main"
+    assert "%fused_gather" in hc.comps
+
+
+def test_type_bytes():
+    assert type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert type_bytes("bf16[8]") == 16
+    assert type_bytes("(f32[2,2], s32[3])") == 16 + 12
+
+
+def test_while_trip_count_multiplies_flops(hc):
+    # one dot of 2*128*128*256 flops, 10 trips
+    assert hc.flops() == pytest.approx(10 * 2 * 128 * 128 * 256)
+
+
+def test_collectives_trip_multiplied_and_ring_modeled(hc):
+    colls = hc.collective_bytes()
+    # all-reduce: result 128*128*4 bytes × ring factor 2 × 10 trips
+    assert colls["all-reduce"] == pytest.approx(128 * 128 * 4 * 2 * 10)
+
+
+def test_gather_fusion_bills_window_not_table(hc):
+    # fusion.1 reads: gathered window (8×64×4) + indices (8×4), writes 8×64×4;
+    # it must NOT bill the 1000×64×4 table.
+    comp = hc.comps["%main"]
+    op = next(o for o in comp.ops if o.name == "%fusion.1")
+    reads = hc._operand_read_bytes(comp, op)
+    assert reads == pytest.approx(8 * 64 * 4 + 8 * 4)
+    assert hc._result_write_bytes(comp, op) == 8 * 64 * 4
+
+
+def test_dus_fusion_bills_update_not_buffer(hc):
+    comp = hc.comps["%main"]
+    op = next(o for o in comp.ops if o.name == "%fusion.2")
+    # write = the 1×64 update, not the 1000×64 buffer
+    assert hc._result_write_bytes(comp, op) == 64 * 4
+    # reads: aliased buffer not billed; update operand + s32 index billed
+    reads = hc._operand_read_bytes(comp, op)
+    assert reads == pytest.approx(64 * 4 + 4)
+
+
+def test_total_bytes_slice_aware(hc):
+    total = hc.hbm_bytes()
+    fusion1 = (8 * 64 * 4 + 8 * 4) + 8 * 64 * 4
+    fusion2 = 64 * 4 + 64 * 4
+    body_once = (128 * 256 * 4 + 256 * 128 * 4) + 128 * 128 * 4 \
+        + 128 * 128 * 4 * 2   # dot r+w… allreduce r+w
+    # while body bytes × 10 trips plus the two fusions (± small tuple ops)
+    assert total >= fusion1 + fusion2
+    assert total == pytest.approx(fusion1 + fusion2 + 10 * (
+        128 * 256 * 4 + 256 * 128 * 4    # dot reads
+        + 128 * 128 * 4                  # dot write
+        + 128 * 128 * 4 * 2              # all-reduce read+write
+    ), rel=0.05)
+
+
+def test_explain_runs(hc):
+    from repro.roofline.explain import explain
+
+    txt = explain(HLO, top=5)
+    assert "total bytes" in txt
+    assert "dot" in txt or "fusion" in txt

@@ -1,0 +1,54 @@
+import itertools
+
+import pytest
+
+from repro.core.pattern import clique, cycle, house, rectangle, star
+from repro.core.schedule import (
+    generate_schedules, is_prefix_connected, last_k_independent, predecessors,
+)
+
+
+def test_phase1_prefix_connected():
+    for p in [house(), clique(4), cycle(5)]:
+        for o in generate_schedules(p):
+            assert is_prefix_connected(p, o)
+
+
+def test_phase2_tail_independent_house():
+    h = house()
+    k = h.max_independent_set_size()
+    assert k == 2
+    for o in generate_schedules(h):
+        assert last_k_independent(h, o, 2)
+
+
+def test_phase2_relaxes_when_conflicting_with_phase1():
+    # 4-cycle: no prefix-connected order ends in the diagonal pair, so
+    # phase 2 must relax to k=1 rather than return nothing.
+    scheds = generate_schedules(rectangle())
+    assert len(scheds) > 0
+    for o in scheds:
+        assert is_prefix_connected(rectangle(), o)
+
+
+def test_schedules_subset_of_all_orders():
+    p = house()
+    scheds = set(generate_schedules(p))
+    assert len(scheds) < 120  # strictly prunes 5! orders
+    assert all(sorted(o) == [0, 1, 2, 3, 4] for o in scheds)
+
+
+def test_clique_keeps_all_connected_orders():
+    # every order of a clique is prefix-connected; k=1 means phase 2 is
+    # vacuous
+    assert len(generate_schedules(clique(4))) == 24
+
+
+def test_predecessors():
+    h = house()
+    preds = predecessors(h, (0, 1, 2, 3, 4))
+    assert preds[0] == []
+    # vertex 1 adjacent to 0
+    assert preds[1] == [0]
+    # roof vertex 4 adjacent to 0 and 1
+    assert preds[4] == [0, 1]
