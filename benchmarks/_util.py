@@ -7,7 +7,9 @@ import time
 from dataclasses import asdict, dataclass, field
 
 from repro.configs.graphpi import get_dataset, get_pattern
-from repro.core.executor import ExecutorConfig, Matcher, compute_stats
+from repro.core.executor import (
+    ExecutorConfig, Matcher, auto_buckets, compute_stats,
+)
 from repro.core.perf_model import GraphStats
 from repro.core.plan import build_plan
 
@@ -30,12 +32,24 @@ def stats_of(name: str) -> GraphStats:
 
 
 def timed_count(graph, plan, *, capacity: int = 1 << 15,
-                repeats: int = 1, budget_s: float = 120.0):
+                repeats: int = 1, budget_s: float = 120.0,
+                cfg: ExecutorConfig | None = None):
     """(count, best_seconds).  Compile excluded (paper methodology).
+
+    The default configuration is the hot path: fused Pallas level
+    expansion (use_pallas=None resolves to True on TPU backends) with
+    auto degree buckets.  On CPU the portable binary-search path runs
+    instead — interpret-mode Pallas is correctness-only; set
+    REPRO_BENCH_PALLAS=1/0 to force either path.
 
     budget_s bounds total measurement wall time: if the first timed run
     exceeds it, we keep that single measurement."""
-    m = Matcher(graph, plan, ExecutorConfig(capacity=capacity))
+    if cfg is None:
+        force = {"1": True, "0": False}.get(
+            os.environ.get("REPRO_BENCH_PALLAS", ""))
+        cfg = ExecutorConfig(capacity=capacity, use_pallas=force,
+                             degree_buckets=auto_buckets(graph))
+    m = Matcher(graph, plan, cfg)
     m.warmup()
     best = None
     count = None

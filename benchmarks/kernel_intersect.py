@@ -77,8 +77,76 @@ def run(full: bool = False) -> list[Row]:
     return rows
 
 
+LEVEL_SHAPES_QUICK = [(256, 128, 3, 128)]
+LEVEL_SHAPES_FULL = [(256, 128, 3, 128), (512, 128, 4, 256),
+                     (1024, 256, 2, 512)]
+
+
+def _level_data(B, D, P, L, E=2, seed=0):
+    rng = np.random.default_rng(seed)
+    nbrs = np.stack([
+        np.stack([np.sort(rng.choice(10 * L, size=L, replace=False))
+                  for _ in range(B)])
+        for _ in range(P)
+    ]).astype(np.int32)
+    cand = rng.integers(0, 10 * L, size=(B, D)).astype(np.int32)
+    extra = rng.integers(0, 10 * L, size=(B, E)).astype(np.int32)
+    dirs = tuple(1 if e % 2 == 0 else 0 for e in range(E))
+    return jnp.asarray(cand), jnp.asarray(nbrs), jnp.asarray(extra), dirs
+
+
+def run_level(full: bool = False) -> list[Row]:
+    """Fused level expansion vs the old per-predecessor composition.
+
+    The old executor hot path issued one `sorted_membership` pallas_call
+    per predecessor plus one XLA mask pass per restriction / injectivity
+    constraint — P + E separate sweeps over the [B, D] candidate matrix.
+    The fused kernel does the whole level in ONE pass (`passes` in the
+    emitted rows records exactly that)."""
+    rows: list[Row] = []
+    for (B, D, P, L) in (LEVEL_SHAPES_FULL if full else LEVEL_SHAPES_QUICK):
+        cand, nbrs, extra, dirs = _level_data(B, D, P, L)
+        E = len(dirs)
+
+        @jax.jit
+        def per_pred(cand, nbrs, extra):
+            # the pre-fusion executor path: one membership kernel pass
+            # per predecessor, then one XLA mask per comparison
+            mask = jnp.ones(cand.shape, dtype=bool)
+            for p in range(P):
+                mask &= ops.sorted_membership(cand, nbrs[p])
+            for e, d in enumerate(dirs):
+                ev = extra[:, e][:, None]
+                mask &= (cand > ev) if d > 0 else (cand != ev)
+            return mask
+
+        fused = lambda: ops.level_expand(cand, nbrs, extra, dirs=dirs)
+        out_old = per_pred(cand, nbrs, extra)
+        out_new = fused()
+        assert bool(jnp.all(out_old == out_new)), (B, D, P, L)
+        cnt = ops.level_expand(cand, nbrs, extra, dirs=dirs, count=True)
+        assert bool(jnp.all(cnt == out_old.sum(axis=1))), (B, D, P, L)
+
+        t_old = _time(lambda: per_pred(cand, nbrs, extra))
+        t_new = _time(fused)
+        t_cnt = _time(lambda: ops.level_expand(cand, nbrs, extra,
+                                               dirs=dirs, count=True))
+        compares = B * D * L * P
+        keys = {"B": B, "D": D, "P": P, "L": L}
+        rows.append(Row("level_expand", {**keys, "impl": "per-pred"},
+                        t_old, "s", {"passes": P + E,
+                                     "gcmp_per_s": compares / t_old / 1e9}))
+        rows.append(Row("level_expand", {**keys, "impl": "fused"},
+                        t_new, "s", {"passes": 1,
+                                     "gcmp_per_s": compares / t_new / 1e9}))
+        rows.append(Row("level_expand", {**keys, "impl": "fused-count"},
+                        t_cnt, "s", {"passes": 1,
+                                     "gcmp_per_s": compares / t_cnt / 1e9}))
+    return rows
+
+
 def main(full: bool = False):
-    emit(run(full), "kernel_intersect")
+    emit(run(full) + run_level(full), "kernel_intersect")
 
 
 if __name__ == "__main__":

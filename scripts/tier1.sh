@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md): fast fail-fast suite.
+#
+# pytest.ini deselects @pytest.mark.slow tests by default so this
+# finishes quickly; use `scripts/tier1.sh --all` (== pytest -m "")
+# to run the full matrix including the slow executor/bucket tests.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--all" ]]; then
+  shift
+  exec python -m pytest -x -q -m "" "$@"
+fi
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,83 @@
+"""Version-compatibility shims for JAX API drift.
+
+The repo targets a JAX compatibility floor of 0.4.37 (the pinned
+toolchain image) while using names that moved or were renamed in later
+releases.  Everything version-sensitive funnels through here so call
+sites stay clean:
+
+  enable_x64()   jax.enable_x64 (new) / jax.experimental.enable_x64 (old)
+  shard_map(...) jax.shard_map (new) / jax.experimental.shard_map (old),
+                 translating the `check_vma=` kwarg to `check_rep=` on
+                 old releases where the varying-manual-axes checker did
+                 not exist yet
+  make_mesh(...) drops the `axis_types=` kwarg (jax.sharding.AxisType)
+                 on releases that predate explicit axis types
+
+Import-time cost is one getattr per name; no jax device state is
+touched (mesh construction stays lazy, see launch/mesh.py).
+"""
+from __future__ import annotations
+
+import jax
+
+# --------------------------------------------------------------- x64 ----
+if hasattr(jax, "enable_x64"):                       # jax >= 0.5
+    enable_x64 = jax.enable_x64
+else:                                                # jax 0.4.x
+    from jax.experimental import enable_x64 as _enable_x64_ctx
+
+    def enable_x64(new_val: bool = True):
+        """Context manager enabling 64-bit jnp types locally."""
+        return _enable_x64_ctx(new_val)
+
+
+# --------------------------------------------------------- shard_map ----
+if hasattr(jax, "shard_map"):                        # jax >= 0.6
+    shard_map = jax.shard_map
+else:                                                # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        """Old-API shard_map: `check_vma` was called `check_rep`."""
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map_old(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+
+# ------------------------------------------------------ ambient mesh ----
+if hasattr(jax.sharding, "set_mesh"):                # jax >= 0.6
+    set_mesh = jax.sharding.set_mesh
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:                                                # jax 0.4.x
+    def set_mesh(mesh):
+        """Old JAX: Mesh is itself the ambient-mesh context manager."""
+        return mesh
+
+    def get_abstract_mesh():
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+
+
+# ---------------------------------------------------------- AxisType ----
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(shape, axis_names, *, axis_types=None):
+    """jax.make_mesh that tolerates missing jax.sharding.AxisType.
+
+    `axis_types` entries may be given as the strings "auto" / "explicit"
+    so callers never import AxisType directly; on releases without
+    explicit axis types the kwarg is silently dropped (every axis is
+    implicitly auto there, which is the semantics all our meshes want).
+    """
+    if AxisType is None or axis_types is None:
+        return jax.make_mesh(shape, axis_names)
+    resolved = tuple(
+        getattr(AxisType, t.capitalize()) if isinstance(t, str) else t
+        for t in axis_types
+    )
+    return jax.make_mesh(shape, axis_names, axis_types=resolved)

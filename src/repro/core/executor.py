@@ -6,7 +6,13 @@ TPU-native adaptation of GraphPi's nested-loop DFS (DESIGN.md §3):
    of partial embeddings is expanded one schedule position at a time;
  * candidate generation gathers a fixed-width window from the flat CSR
    `indices` array at the (dynamically chosen) minimum-degree predecessor;
- * adjacency / restriction / injectivity checks are fused vectorized masks;
+ * ONE shared per-level admissibility core (`expand_core`) serves every
+   path — bucketed and single-window expansion, the last-level popcount
+   and the IEP-tail cardinalities.  On the Pallas path the whole level
+   (membership against all predecessors + restriction + injectivity
+   masks, reduced to a mask or an in-kernel popcount) is a single fused
+   kernel pass over the candidate matrix; the portable path is a
+   vectorized binary search over flat CSR segments plus XLA masks;
  * compaction is a cumsum scatter (stream compaction);
  * the IEP tail is evaluated in closed form per surviving prefix;
  * distribution = `shard_map` over the mesh `data` axis with the paper's
@@ -26,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import enable_x64, shard_map
 from ..graph.csr import GraphCSR
 from .pattern import Pattern, clique
 from .perf_model import GraphStats
@@ -70,14 +77,24 @@ def _bs_iters(max_degree: int) -> int:
 class ExecutorConfig:
     capacity: int = 1 << 15          # frontier rows per level
     dynamic_base: bool = True        # per-row min-degree base predecessor
-    use_pallas: bool = False         # Pallas membership kernel (TPU path)
+    # Fused Pallas level-expansion kernel (the TPU hot path).  None =
+    # auto: True on TPU backends, False elsewhere — interpret-mode
+    # Pallas is bit-exact but slow, so CPU/CI defaults to the portable
+    # binary-search path; parity tests force True explicitly.
+    use_pallas: bool | None = None
     # Degree-bucketed expansion (§Perf, graphpi cell): ((width, frac), ...)
     # ascending widths; rows whose base degree fits a narrower window are
     # compacted into a frac·capacity sub-frontier and gathered at that
     # width, so power-law max-degree padding is paid only by the rows
     # that need it.  None = single max-degree window (paper-faithful
-    # baseline behaviour).
+    # baseline behaviour); internally that is the degenerate one-bucket
+    # layout ((W, 1.0),) — both run the same expansion core.
     degree_buckets: tuple | None = None
+
+    def resolve_use_pallas(self) -> bool:
+        if self.use_pallas is None:
+            return jax.default_backend() == "tpu"
+        return self.use_pallas
 
 
 def auto_buckets(graph, *, small: int = 128, mid: int = 1024):
@@ -121,12 +138,24 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
     n = plan.n
     depth = plan.depth
     C = cfg.capacity
+    use_pallas = cfg.resolve_use_pallas()
 
-    def gather_window(flat, indptr, degrees, base):
+    # Normalized bucket layout; None collapses to the degenerate single
+    # max-degree window so there is exactly ONE expansion path.
+    buckets = cfg.degree_buckets
+    if buckets is not None:
+        buckets = tuple((min(int(w), W), float(f)) for (w, f) in buckets)
+        if buckets[-1][0] < W:
+            buckets = buckets + ((W, buckets[-1][1]),)
+    else:
+        buckets = ((W, 1.0),)
+
+    def gather_window(flat, indptr, degrees, base, width):
         start = indptr[base]
-        cand = flat[start[:, None] + jnp.arange(W, dtype=start.dtype)[None, :]]
-        width_ok = jnp.arange(W)[None, :] < degrees[base][:, None]
-        return cand, width_ok
+        cand = flat[start[:, None]
+                    + jnp.arange(width, dtype=start.dtype)[None, :]]
+        ok = jnp.arange(width)[None, :] < degrees[base][:, None]
+        return cand, ok
 
     def pick_base(emb, degrees, preds):
         pv = emb[:, jnp.asarray(preds)]            # [C, P]
@@ -136,124 +165,65 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
         sel = jnp.argmin(dg, axis=1)
         return jnp.take_along_axis(pv, sel[:, None], axis=1)[:, 0]
 
-    def member_many(emb, mask, cand, positions, indptr, degrees, flat):
-        """AND into `mask` the membership of cand in N(emb[:, p]) ∀p.
+    def level_extras(i):
+        """Restriction + injectivity comparisons at loop position i as a
+        uniform ((emb column, dir), ...) spec; dir ∈ {+1: >, -1: <, 0: !=}."""
+        return tuple(plan.restr[i]) + tuple((j, 0) for j in plan.neqs[i])
 
-        Two implementations: portable vectorized binary search over flat
-        CSR segments, or the Pallas blocked broadcast-compare kernel on
-        gathered neighbor windows (the TPU-optimized path)."""
-        if cfg.use_pallas:
-            from ..kernels.ops import sorted_membership
+    def expand_core(emb, base, valid, preds, extras,
+                    indptr, degrees, flat, width, *, want_counts=False):
+        """THE per-level admissibility core (shared by every path).
 
-            for p in positions:
-                u = emb[:, p]
-                nbr, _ = gather_window(flat, indptr, degrees, u)
-                mask &= sorted_membership(
-                    cand, nbr, cand_valid=mask, nbr_len=degrees[u]
-                )
-            return mask
-        for p in positions:
-            u = emb[:, p]
-            lo = indptr[u][:, None]
-            hi = lo + degrees[u][:, None]
-            mask &= _segment_member(flat, lo, hi, cand, iters)
-        return mask
+        Gathers the candidate window at `base`, tests membership in
+        every predecessor neighborhood, and applies the restriction /
+        injectivity comparisons.  Returns (cand, mask) — or per-row
+        int32 counts when `want_counts` (last enumeration level and
+        IEP-tail cardinalities).
 
-    def level_mask(i, emb, valid, indptr, degrees, flat):
-        """Candidate matrix + admissibility mask for loop position i."""
-        preds = plan.preds[i]
-        base = pick_base(emb, degrees, preds)
-        cand, mask = gather_window(flat, indptr, degrees, base)
-        mask &= valid[:, None]
+        Pallas path: everything above is ONE fused kernel pass over the
+        candidate matrix (kernels.intersect.level_expand_pallas), with
+        the predecessor loop on the innermost grid dimension — one HBM
+        round trip per level where the portable path does one compare /
+        mask pass per predecessor, restriction, and != constraint.  The
+        base's own membership test is redundant but keeps the kernel
+        branch-free under the dynamic-base selection.
+        """
+        cand, ok = gather_window(flat, indptr, degrees, base, width)
+        mask = ok & valid[:, None]
+        if use_pallas and len(preds) > 1:
+            from ..kernels.ops import level_expand
+
+            us = emb[:, jnp.asarray(preds)].T                      # [P, B]
+            starts = indptr[us]
+            nbrs = flat[starts[:, :, None]
+                        + jnp.arange(W, dtype=starts.dtype)[None, None, :]]
+            res = level_expand(
+                cand, nbrs,
+                emb[:, jnp.asarray([c for c, _ in extras])] if extras
+                else None,
+                mask, degrees[us],
+                dirs=tuple(d for _, d in extras), count=want_counts,
+            )
+            return res if want_counts else (cand, res)
         if len(preds) > 1:
             # membership in every predecessor's neighborhood (the base's
-            # own test is redundant but keeps the kernel branch-free under
+            # own test is redundant but keeps the mask branch-free under
             # the dynamic-base selection)
-            mask = member_many(emb, mask, cand, preds, indptr, degrees, flat)
-        for (other, d) in plan.restr[i]:
-            ov = emb[:, other][:, None]
-            mask &= (cand > ov) if d > 0 else (cand < ov)
-        for j in plan.neqs[i]:
-            mask &= cand != emb[:, j][:, None]
-        return cand, mask
-
-    def compact(emb, cand, mask, i):
-        """Stream-compact (row, cand) pairs into a new [C, i+1] frontier."""
-        flat_mask = mask.reshape(-1)
-        pos = jnp.cumsum(flat_mask) - 1
-        total = pos[-1] + 1
-        out_idx = jnp.where(flat_mask, pos, C)      # C = drop slot
-        parent = jnp.zeros((C + 1,), dtype=jnp.int32)
-        rows = (
-            jnp.arange(flat_mask.shape[0], dtype=jnp.int32) // W
-        )
-        parent = parent.at[out_idx].set(rows, mode="drop")
-        newcol = jnp.zeros((C + 1,), dtype=cand.dtype)
-        newcol = newcol.at[out_idx].set(cand.reshape(-1), mode="drop")
-        parent, newcol = parent[:C], newcol[:C]
-        new_emb = jnp.concatenate(
-            [emb[parent, :i], newcol[:, None]], axis=1
-        )
-        new_valid = jnp.arange(C) < total
-        return new_emb, new_valid, total.astype(jnp.int32)
-
-    def iep_value(emb, valid, indptr, degrees, flat):
-        """Per-row IEP count over the folded tail (int64)."""
-        iep = plan.iep
-        cards = []
-        for U in iep.unions:
-            base = pick_base(emb, degrees, U)
-            cand, mask = gather_window(flat, indptr, degrees, base)
-            if len(U) > 1:
-                mask = member_many(emb, mask, cand, U, indptr, degrees, flat)
-            raw = jnp.sum(mask, axis=1).astype(jnp.int64)
-            # subtract already-assigned prefix vertices inside the
-            # intersection (injectivity w.r.t. outer loops)
-            corr = jnp.zeros_like(raw)
-            for j in range(depth):
-                vj = emb[:, j]
-                inside = jnp.ones_like(vj, dtype=bool)
-                for q in U:
-                    u = emb[:, q]
-                    inside &= _segment_member(
-                        flat, indptr[u], indptr[u] + degrees[u], vj, iters
-                    )
-                corr += inside.astype(jnp.int64)
-            cards.append(raw - corr)
-        val = jnp.zeros(emb.shape[0], dtype=jnp.int64)
-        for coeff, idxs in iep.terms:
-            term = jnp.full(emb.shape[0], coeff, dtype=jnp.int64)
-            for u in idxs:
-                term = term * cards[u]
-            val = val + term
-        return jnp.where(valid, val, 0)
-
-    # ------------------------------------------------ degree-bucketed path
-    buckets = cfg.degree_buckets
-    if buckets is not None:
-        buckets = tuple((min(int(w), W), float(f)) for (w, f) in buckets)
-        if buckets[-1][0] < W:
-            buckets = buckets + ((W, buckets[-1][1]),)
-
-    def gather_window_w(flat, indptr, degrees, base, width):
-        start = indptr[base]
-        cand = flat[start[:, None]
-                    + jnp.arange(width, dtype=start.dtype)[None, :]]
-        ok = jnp.arange(width)[None, :] < degrees[base][:, None]
-        return cand, ok
-
-    def level_mask_w(i, emb, base, valid, indptr, degrees, flat, width):
-        """level_mask on a row-compacted sub-frontier at window `width`."""
-        preds = plan.preds[i]
-        cand, mask = gather_window_w(flat, indptr, degrees, base, width)
-        mask &= valid[:, None]
-        if len(preds) > 1:
-            mask = member_many(emb, mask, cand, preds, indptr, degrees, flat)
-        for (other, d) in plan.restr[i]:
-            ov = emb[:, other][:, None]
-            mask &= (cand > ov) if d > 0 else (cand < ov)
-        for j in plan.neqs[i]:
-            mask &= cand != emb[:, j][:, None]
+            for p in preds:
+                u = emb[:, p]
+                lo = indptr[u][:, None]
+                hi = lo + degrees[u][:, None]
+                mask &= _segment_member(flat, lo, hi, cand, iters)
+        for (col, d) in extras:
+            ev = emb[:, col][:, None]
+            if d > 0:
+                mask &= cand > ev
+            elif d < 0:
+                mask &= cand < ev
+            else:
+                mask &= cand != ev
+        if want_counts:
+            return mask.sum(axis=1).astype(jnp.int32)
         return cand, mask
 
     def select_rows(rowmask, cap):
@@ -281,12 +251,13 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
             yield bi, w, cap, lo, bi == len(buckets) - 1
             lo = w
 
-    def expand_bucketed(i, emb, valid, needed, indptr, degrees, flat):
-        """One level of frontier expansion with degree-bucketed windows.
+    def expand_level(i, emb, valid, needed, indptr, degrees, flat):
+        """One level of frontier expansion over the bucket layout.
 
         Returns (new_emb, new_valid, needed) — or, at the last
         enumeration level, (count_contribution, None, needed)."""
         preds = plan.preds[i]
+        extras = level_extras(i)
         base_all = pick_base(emb, degrees, preds)
         db = degrees[base_all]
         last_enum = (plan.iep is None) and (i == n - 1)
@@ -302,12 +273,18 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
             needed = jnp.maximum(needed, scaled_need(sub_total, cap))
             sub_emb = jnp.take(emb, sel_idx, axis=0, mode="clip")[:, :i]
             sub_base = jnp.take(base_all, sel_idx, mode="clip")
-            cand, mask = level_mask_w(
-                i, sub_emb, sub_base, sub_valid, indptr, degrees, flat, width
-            )
             if last_enum:
-                total_cnt += jnp.sum(mask, dtype=jnp.int64)
+                cnts = expand_core(
+                    sub_emb, sub_base, sub_valid, preds, extras,
+                    indptr, degrees, flat, width, want_counts=True,
+                )
+                total_cnt += jnp.sum(cnts, dtype=jnp.int64)
                 continue
+            cand, mask = expand_core(
+                sub_emb, sub_base, sub_valid, preds, extras,
+                indptr, degrees, flat, width,
+            )
+            # stream-compact surviving (row, cand) pairs behind `offset`
             flat_mask = mask.reshape(-1)
             pos = jnp.cumsum(flat_mask) - 1
             bucket_total = (pos[-1] + 1).astype(jnp.int32)
@@ -327,8 +304,9 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
         needed = jnp.maximum(needed, offset)
         return new_emb, new_valid, needed
 
-    def iep_value_bucketed(emb, valid, indptr, degrees, flat):
-        """IEP over the folded tail with bucketed union-window gathers."""
+    def iep_value(emb, valid, indptr, degrees, flat):
+        """Per-row IEP count over the folded tail (int64), with bucketed
+        union-window gathers through the shared expansion core."""
         iep = plan.iep
         cards = []
         needed_extra = jnp.asarray(0, jnp.int32)
@@ -345,13 +323,12 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
                                            scaled_need(sub_total, cap))
                 sub_emb = jnp.take(emb, sel_idx, axis=0, mode="clip")
                 sub_base = jnp.take(base, sel_idx, mode="clip")
-                cand, mask = gather_window_w(flat, indptr, degrees, sub_base,
-                                             width)
-                mask &= sub_valid[:, None]
-                if len(U) > 1:
-                    mask = member_many(sub_emb, mask, cand, U, indptr,
-                                       degrees, flat)
-                raw = jnp.sum(mask, axis=1).astype(jnp.int64)
+                raw = expand_core(
+                    sub_emb, sub_base, sub_valid, U, (),
+                    indptr, degrees, flat, width, want_counts=True,
+                ).astype(jnp.int64)
+                # subtract already-assigned prefix vertices inside the
+                # intersection (injectivity w.r.t. outer loops)
                 corr = jnp.zeros_like(raw)
                 for j in range(depth):
                     vj = sub_emb[:, j]
@@ -373,26 +350,6 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
             val = val + term
         return jnp.where(valid, val, 0), needed_extra
 
-    def count_bucketed(indptr, degrees, flat, v0):
-        emb = v0[:, None].astype(jnp.int32)
-        valid = v0 < (indptr.shape[0] - 1)
-        T = emb.shape[0]
-        if T < C:
-            emb = jnp.pad(emb, ((0, C - T), (0, 0)))
-            valid = jnp.pad(valid, (0, C - T))
-        needed = jnp.asarray(T, dtype=jnp.int32)
-        for i in range(1, depth):
-            out, new_valid, needed = expand_bucketed(
-                i, emb, valid, needed, indptr, degrees, flat)
-            if new_valid is None:          # last enumeration level
-                return out, needed
-            emb, valid = out, new_valid
-        if plan.iep is None:
-            return jnp.sum(valid, dtype=jnp.int64), needed
-        vals, need2 = iep_value_bucketed(emb, valid, indptr, degrees, flat)
-        return jnp.sum(vals), jnp.maximum(needed, need2)
-
-    # ----------------------------------------------------- unbucketed path
     def count(indptr, degrees, flat, v0):
         emb = v0[:, None].astype(jnp.int32)                    # [T, 1]
         valid = v0 < (indptr.shape[0] - 1)
@@ -403,20 +360,18 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
             valid = jnp.pad(valid, (0, C - T))
         needed = jnp.asarray(T, dtype=jnp.int32)
         for i in range(1, depth):
-            last_enum = (plan.iep is None) and (i == n - 1)
-            cand, mask = level_mask(i, emb, valid, indptr, degrees, flat)
-            if last_enum:
-                return jnp.sum(mask, dtype=jnp.int64), needed
-            emb, valid, used = compact(emb, cand, mask, i)
-            needed = jnp.maximum(needed, used)
+            out, new_valid, needed = expand_level(
+                i, emb, valid, needed, indptr, degrees, flat)
+            if new_valid is None:          # last enumeration level
+                return out, needed
+            emb, valid = out, new_valid
         if plan.iep is None:
             # depth-1 == 0: single-vertex pattern — count valid v0 rows
             return jnp.sum(valid, dtype=jnp.int64), needed
-        assert plan.iep is not None
-        vals = iep_value(emb, valid, indptr, degrees, flat)
-        return jnp.sum(vals), needed
+        vals, need2 = iep_value(emb, valid, indptr, degrees, flat)
+        return jnp.sum(vals), jnp.maximum(needed, need2)
 
-    return count_bucketed if buckets is not None else count
+    return count
 
 
 # --------------------------------------------------------------------------
@@ -461,7 +416,7 @@ class Matcher:
         indptr, degrees, flat = self._arrays
         chunk = self.cfg.capacity
         v0 = jnp.full((chunk,), self.graph.n, dtype=jnp.int32)
-        with jax.enable_x64(True):
+        with enable_x64(True):
             jax.block_until_ready(
                 self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
 
@@ -472,7 +427,7 @@ class Matcher:
         escalates to a doubled-capacity kernel so the count stays exact."""
         graph, cfg = self.graph, self.cfg
         indptr, degrees, flat = self._arrays
-        with jax.enable_x64(True):
+        with enable_x64(True):
             total = 0
             overflowed = False
             max_needed = 0
@@ -533,7 +488,7 @@ def count_embeddings_sharded(
     frontier exceeds capacity, the whole pass is retried at doubled
     capacity (straggler-free SPMD analogue of the single-device
     bisection — every retry is a fresh collective-complete program)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     cfg = cfg or ExecutorConfig()
     W = max(graph.max_degree, 1)
@@ -568,10 +523,10 @@ def count_embeddings_sharded(
             (tot, mx), _ = jax.lax.scan(body, init, chunks)
             return jax.lax.psum(tot, axis), jax.lax.pmax(mx, axis)
 
-        with jax.enable_x64(True):
+        with enable_x64(True):
             spec = P(axis)
             fn = jax.jit(
-                jax.shard_map(
+                shard_map(
                     shard_fn,
                     mesh=mesh,
                     in_specs=(P(), P(), P(), spec),

@@ -9,10 +9,17 @@ intensity is D·L compares per D+L loaded words, so for typical
 neighborhood lengths the kernel is compute-dense on the VPU instead of
 latency-bound like a merge.
 
-Two kernels:
+Three kernels:
   membership_kernel      mask[b, d] = cand[b, d] ∈ nbr[b, :]
   intersect_count_kernel cnt[b]     = |{d : cand[b, d] ∈ nbr[b, :]}|
                          (membership + in-kernel popcount, fused)
+  level_expand_kernel    the executor's whole per-level admissibility
+                         test in ONE pass: membership against ALL
+                         predecessor neighborhoods (stacked on the
+                         innermost grid dimension), the asymmetric-
+                         restriction comparisons and injectivity !=
+                         masks against per-row prefix vertices, reduced
+                         to either a mask or an in-kernel popcount.
 
 Padding contract: `cand` padded with -1, `nbr` padded with INT_MAX
 (sorted ascending), so padding never produces a match.
@@ -70,6 +77,138 @@ def _count_body(cand_ref, nbr_ref, out_ref, acc_ref, *, block_l: int):
     @pl.when((j == nj - 1) & (k == nk - 1))
     def _flush():
         out_ref[...] = acc_ref[...]
+
+
+def _level_expand_body(*refs, n_preds: int, dirs: tuple, count: bool):
+    """Fused per-level admissibility test.
+
+    Grid = (B/bb, D/bd, P·L/bl): the innermost dimension walks every
+    (predecessor, neighbor-block) pair, so one grid sweep touches the
+    candidate block once per predecessor block instead of re-launching a
+    kernel (and re-streaming the candidate matrix through HBM) per
+    predecessor.  A VMEM hit-accumulator counts, for each candidate, in
+    how many predecessor neighborhoods it was found (nbr rows must be
+    STRICTLY increasing on their valid prefix — as CSR neighborhoods
+    are — so each row matches a candidate at most once, even across
+    l-blocks); admissibility is hits == P, ANDed
+    with the restriction (>/<) and injectivity (!=) comparisons against
+    the per-row prefix-vertex values in `extra` — all applied at the
+    final block, so the whole level is a single pass over HBM.
+
+    refs layout: cand, nbr, [extra,] out, hits, [acc]
+      cand  [bb, bd]    candidate block (CAND_PAD-masked)
+      nbr   [1, bb, bl] one predecessor's neighbor block (NBR_PAD-masked)
+      extra [bb, E]     prefix-vertex values, E == len(dirs) (if E > 0)
+      out   [bb, bd] bool mask  — or [bb, 1] int32 row counts if `count`
+      hits  [bb, bd] int32 VMEM scratch
+      acc   [bb, 1]  int32 VMEM scratch (count mode only)
+    """
+    if dirs:
+        cand_ref, nbr_ref, extra_ref, out_ref, *scratch = refs
+    else:
+        cand_ref, nbr_ref, out_ref, *scratch = refs
+        extra_ref = None
+    hits_ref = scratch[0]
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    nj = pl.num_programs(1)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init_hits():
+        hits_ref[...] = jnp.zeros_like(hits_ref)
+
+    if count:
+        acc_ref = scratch[1]
+
+        @pl.when((j == 0) & (k == 0))
+        def _init_acc():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cand = cand_ref[...]                  # [bb, bd]
+    nbr = nbr_ref[0]                      # [bb, bl]
+    hit = (cand[:, :, None] == nbr[:, None, :]).any(axis=-1)
+    hits_ref[...] += hit.astype(jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        mask = hits_ref[...] == n_preds
+        for e, d in enumerate(dirs):
+            ev = extra_ref[:, e][:, None]  # [bb, 1]
+            if d > 0:
+                mask &= cand > ev
+            elif d < 0:
+                mask &= cand < ev
+            else:
+                mask &= cand != ev
+        if count:
+            acc_ref[...] += mask.sum(axis=1, keepdims=True).astype(jnp.int32)
+
+            @pl.when(j == nj - 1)
+            def _flush():
+                out_ref[...] = acc_ref[...]
+        else:
+            out_ref[...] = mask
+
+
+def level_expand_pallas(
+    cand: jax.Array,                      # [B, D] int32, CAND_PAD-masked
+    nbrs: jax.Array,                      # [P, B, L] int32, NBR_PAD-masked
+    extra: jax.Array | None = None,       # [B, E] int32 (E == len(dirs))
+    *,
+    dirs: tuple = (),
+    count: bool = False,
+    block_b: int = 8,
+    block_d: int = 128,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One fused pass per expansion level (shapes pre-padded to block
+    multiples — ops.level_expand handles that).
+
+    mask[b, d] = (∀p: cand[b, d] ∈ nbrs[p, b, :]) ∧ extras(b, d), where
+    extras applies dirs[e] ∈ {+1: cand > extra[b, e], -1: cand <,
+    0: cand !=}.  `count=True` instead returns cnt[b] = Σ_d mask[b, d]
+    via the in-kernel popcount accumulator (intersect_count pattern).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, D = cand.shape
+    P, Bn, L = nbrs.shape
+    assert B == Bn and P >= 1, (cand.shape, nbrs.shape)
+    assert B % block_b == 0 and D % block_d == 0 and L % block_l == 0
+    nl = L // block_l
+    grid = (B // block_b, D // block_d, P * nl)
+    in_specs = [
+        pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
+        pl.BlockSpec((1, block_b, block_l),
+                     lambda i, j, k: (k // nl, i, k % nl)),
+    ]
+    operands = [cand, nbrs]
+    if dirs:
+        assert extra is not None and extra.shape == (B, len(dirs))
+        in_specs.append(
+            pl.BlockSpec((block_b, len(dirs)), lambda i, j, k: (i, 0)))
+        operands.append(extra)
+    scratch = [pltpu.VMEM((block_b, block_d), jnp.int32)]
+    if count:
+        out_specs = pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        scratch.append(pltpu.VMEM((block_b, 1), jnp.int32))
+    else:
+        out_specs = pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j))
+        out_shape = jax.ShapeDtypeStruct((B, D), jnp.bool_)
+    out = pl.pallas_call(
+        functools.partial(_level_expand_body, n_preds=P, dirs=tuple(dirs),
+                          count=count),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+    return out[:, 0] if count else out
 
 
 def membership_pallas(

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from .intersect import (
-    CAND_PAD, NBR_PAD, intersect_count_pallas, membership_pallas,
+    CAND_PAD, NBR_PAD, intersect_count_pallas, level_expand_pallas,
+    membership_pallas,
 )
 
 
@@ -88,6 +89,63 @@ def intersect_count(
         interpret=interpret,
     )
     return out[:B]
+
+
+@partial(jax.jit, static_argnames=("dirs", "count", "block_b", "block_d",
+                                   "block_l", "interpret"))
+def level_expand(
+    cand: jax.Array,                      # [B, D] candidate window
+    nbrs: jax.Array,                      # [P, B, L] predecessor windows
+    extra: jax.Array | None = None,       # [B, E] prefix-vertex values
+    cand_valid: jax.Array | None = None,  # [B, D] bool
+    nbr_lens: jax.Array | None = None,    # [P, B] valid prefix lengths
+    *,
+    dirs: tuple = (),
+    count: bool = False,
+    block_b: int = 8,
+    block_d: int = 128,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One fused Pallas pass for a whole expansion level.
+
+    mask[b, d] = cand_valid[b, d]
+               ∧ (∀p: cand[b, d] ∈ nbrs[p, b, :nbr_lens[p, b]])
+               ∧ (∀e: cand[b, d] <op dirs[e]> extra[b, e])
+    with <op> ∈ {+1: >, -1: <, 0: !=}.
+    `count=True` returns cnt[b] = Σ_d mask[b, d] (int32) instead.
+
+    Contract: nbr rows STRICTLY increasing on their valid prefix (CSR
+    neighborhoods are) — the kernel's per-candidate hit accumulator
+    relies on at most one match per predecessor row, so a duplicated
+    neighbor value would double-count.
+    """
+    B, D = cand.shape
+    P, _, L = nbrs.shape
+    cand = cand.astype(jnp.int32)
+    nbrs = nbrs.astype(jnp.int32)
+    if cand_valid is not None:
+        cand = jnp.where(cand_valid, cand, CAND_PAD)
+    if nbr_lens is not None:
+        pos = jnp.arange(L, dtype=jnp.int32)[None, None, :]
+        nbrs = jnp.where(pos < nbr_lens[:, :, None], nbrs, NBR_PAD)
+    cand_p = _pad_to(cand, block_b, block_d, CAND_PAD)
+    pb = (-B) % block_b
+    pL = (-L) % block_l
+    if pb or pL:
+        nbrs = jnp.pad(nbrs, ((0, 0), (0, pb), (0, pL)),
+                       constant_values=NBR_PAD)
+    if dirs:
+        extra = extra.astype(jnp.int32)
+        if pb:
+            extra = jnp.pad(extra, ((0, pb), (0, 0)))
+    out = level_expand_pallas(
+        cand_p, nbrs, extra if dirs else None,
+        dirs=tuple(dirs), count=count,
+        block_b=block_b, block_d=block_d, block_l=block_l,
+        interpret=interpret,
+    )
+    return out[:B] if count else out[:B, :D]
 
 
 # ------------------------------------------------------------ attention ---

@@ -25,6 +25,40 @@ def intersect_count_ref(cand: jax.Array, nbr: jax.Array) -> jax.Array:
     return membership_ref(cand, nbr).astype(jnp.int32)
 
 
+def level_expand_ref(
+    cand: jax.Array,                      # [B, D]
+    nbrs: jax.Array,                      # [P, B, L]
+    extra: jax.Array | None = None,       # [B, E]
+    cand_valid: jax.Array | None = None,  # [B, D] bool
+    nbr_lens: jax.Array | None = None,    # [P, B]
+    *,
+    dirs: tuple = (),
+    count: bool = False,
+) -> jax.Array:
+    """Oracle for the fused level-expansion kernel (ops.level_expand):
+    membership against every predecessor window, then the restriction /
+    injectivity comparisons, as plain separate jnp passes.  Same
+    contract: nbr rows strictly increasing on the valid prefix."""
+    mask = jnp.ones(cand.shape, dtype=bool)
+    if cand_valid is not None:
+        mask &= cand_valid
+    for p in range(nbrs.shape[0]):
+        nb = nbrs[p]
+        if nbr_lens is not None:
+            pos = jnp.arange(nb.shape[1])[None, :]
+            nb = jnp.where(pos < nbr_lens[p][:, None], nb, -(2**31))
+        mask &= membership_ref(cand, nb)
+    for e, d in enumerate(dirs):
+        ev = extra[:, e][:, None]
+        if d > 0:
+            mask &= cand > ev
+        elif d < 0:
+            mask &= cand < ev
+        else:
+            mask &= cand != ev
+    return mask.sum(axis=1).astype(jnp.int32) if count else mask
+
+
 # ------------------------------------------------------------ attention ---
 def flash_attention_ref(q, k, v, *, causal=True, sm_scale=None):
     """Oracle for the flash kernel: plain softmax attention in fp32.

@@ -79,6 +79,7 @@ def flash_kernel_flops(cfg, shape, mesh) -> float:
 def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
                opts=None):
     """Lower+compile one cell; returns (compiled, model_flops)."""
+    from ..compat import set_mesh
     from ..configs import SHAPES, get_config, input_specs
     from ..models import transformer as T
     from ..serve.serve_step import make_decode, make_prefill
@@ -89,7 +90,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str, *,
     shape = SHAPES[shape_name]
     mf = model_flops_estimate(cfg, shape)
 
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             batch_shape = input_specs(cfg, shape)
             opts = opts or TrainOptions()
@@ -156,9 +157,11 @@ def lower_graphpi(mesh, mesh_name: str, *, buckets: bool | None = None):
         cnt, needed = count_fn(indptr, degrees, flat, v0_local)
         return jax.lax.psum(cnt, ax), jax.lax.pmax(needed, ax)
 
-    with jax.enable_x64(True):
+    from ..compat import enable_x64, shard_map
+
+    with enable_x64(True):
         fn = jax.jit(
-            jax.shard_map(
+            shard_map(
                 shard_fn, mesh=mesh,
                 in_specs=(P(), P(), P(), P(ax)),
                 out_specs=(P(), P()),

@@ -41,6 +41,7 @@ def main(argv=None):
 
     from ..configs import get_config, get_smoke_config, input_specs
     from ..configs.base import ShapeConfig
+    from ..compat import set_mesh
     from ..launch.mesh import make_host_mesh
     from ..models import transformer as T
     from ..serve.serve_step import make_decode, make_prefill
@@ -53,7 +54,7 @@ def main(argv=None):
     max_seq = args.max_seq or (S + args.gen)
 
     key = jax.random.PRNGKey(args.seed)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.jit(lambda k: T.init(cfg, k))(key)
 
         # ---- prefill --------------------------------------------------------

@@ -72,6 +72,7 @@ def test_elastic_resharding(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_train_resume_continues_stream(tmp_path):
     """End-to-end: train 4 steps, kill, resume → identical params to an
     uninterrupted 8-step run (checkpoint + deterministic data pipeline)."""

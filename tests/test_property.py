@@ -1,7 +1,13 @@
-"""Hypothesis property tests over the system's core invariants."""
+"""Hypothesis property tests over the system's core invariants.
+
+`hypothesis` is an optional dev dependency (requirements-dev.txt); the
+whole module skips cleanly when it is not installed so `pytest -x`
+never dies at collection."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core.executor import ExecutorConfig, count_embeddings
 from repro.core.oracle import count_embeddings_oracle, count_injective_maps

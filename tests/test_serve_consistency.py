@@ -31,8 +31,10 @@ def _prompts(cfg, key, S):
     return batch
 
 
-@pytest.mark.parametrize("arch", ["qwen3-1.7b", "granite-moe-1b-a400m",
-                                  "mamba2-370m", "jamba-v0.1-52b"])
+@pytest.mark.parametrize("arch", [
+    "qwen3-1.7b", "granite-moe-1b-a400m", "mamba2-370m",
+    pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow),
+])
 def test_decode_matches_prefill_logits(arch):
     """Prefill the first S-1 tokens, decode token S-1; its logits must
     match the full-sequence forward's last-position logits.
