@@ -94,25 +94,41 @@ def run(full: bool = False) -> list[Row]:
                         total / max(blocked.max(), 1.0), "proj_speedup",
                         {"balance": float(blocked.mean() / blocked.max())}))
 
-    # correctness half on whatever real devices exist
+    # correctness + wall-clock half on whatever real devices exist; both
+    # executor paths (portable binary search and the fused Pallas level
+    # kernel) run across the host mesh so the two curves sit side by side
+    # (ROADMAP: distributed striping benchmark).  Off-TPU the Pallas
+    # curve is interpret-mode — bit-exact but slow, so it is a
+    # correctness curve there, not a speed one.
+    import time
+
     import jax
 
     if jax.device_count() > 1:
         from repro.core.executor import (
-            ExecutorConfig, count_embeddings, count_embeddings_sharded,
+            ExecutorConfig, ShardedMatcher, count_embeddings,
         )
         from repro.launch.mesh import make_host_mesh
 
-        cfg = ExecutorConfig(capacity=1 << 14)
-        single = count_embeddings(graph, plan, cfg)
         mesh = make_host_mesh(model=1)
-        sharded = count_embeddings_sharded(graph, plan, mesh, cfg=cfg)
-        assert single.count == sharded.count, (single.count, sharded.count)
-        rows.append(Row("fig12", {"pattern": spec["pattern"],
-                                  "dataset": spec["dataset"],
-                                  "devices": jax.device_count(),
-                                  "policy": "shard_map-count-invariance"},
-                        1.0, "ok", {"count": sharded.count}))
+        for policy, use_pallas in (("portable", False), ("pallas", True)):
+            cfg = ExecutorConfig(capacity=1 << 14, use_pallas=use_pallas)
+            single = count_embeddings(graph, plan, cfg)
+            sm = ShardedMatcher(graph, plan, mesh, cfg=cfg)
+            # warm with a full untimed count so even the capacities the
+            # overflow-escalation path needs are compiled before timing
+            sm.count()
+            t0 = time.perf_counter()
+            sharded = sm.count()
+            dt = time.perf_counter() - t0
+            assert single.count == sharded.count, (
+                policy, single.count, sharded.count)
+            rows.append(Row("fig12", {"pattern": spec["pattern"],
+                                      "dataset": spec["dataset"],
+                                      "devices": jax.device_count(),
+                                      "policy": f"shard_map-{policy}"},
+                            dt, "s", {"count": sharded.count,
+                                      "count_invariant": True}))
     return rows
 
 

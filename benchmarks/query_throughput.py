@@ -1,0 +1,85 @@
+"""Query-serving throughput — cold vs warm queries/sec through the
+plan cache.
+
+Cold phase: a fresh `QueryEngine` serves each distinct pattern once, so
+every query pays configuration search + plan build + JIT (the price the
+old one-shot CLI paid per invocation).  Warm phase: the same patterns —
+plus isomorphic relabelings, which must also hit — are re-served
+`WARM_ROUNDS` times through the populated cache.  The cold/warm ratio
+is the serving subsystem's reason to exist; warm p50/p99 is the
+steady-state request latency.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.executor import ExecutorConfig
+from repro.query import PlanCache, QueryEngine, QueryRequest, relabeled_variant
+
+from ._util import Row, emit, get_pattern, graph_of, stats_of
+
+QUICK = {"dataset": "tiny-er", "patterns": ["P1", "P2", "P4"],
+         "capacity": 1 << 14}
+FULL = {"dataset": "small-rmat", "patterns": ["P1", "P2", "P4", "P5"],
+        "capacity": 1 << 15}
+WARM_ROUNDS = 3
+
+
+def run(full: bool = False) -> list[Row]:
+    spec = FULL if full else QUICK
+    graph = graph_of(spec["dataset"])
+    patterns = [get_pattern(n) for n in spec["patterns"]]
+    engine = QueryEngine(
+        graph,
+        cfg=ExecutorConfig(capacity=spec["capacity"]),
+        cache=PlanCache(),
+        stats=stats_of(spec["dataset"]),
+    )
+
+    t0 = time.perf_counter()
+    cold = engine.serve([QueryRequest(p) for p in patterns])
+    cold_s = time.perf_counter() - t0
+    assert all(not r.cache_hit for r in cold)
+    cold_lat = engine.latency_percentiles()
+
+    engine.reset_latencies()
+    warm_reqs = []
+    for rnd in range(WARM_ROUNDS):
+        for i, p in enumerate(patterns):
+            warm_reqs.append(QueryRequest(p))
+            warm_reqs.append(QueryRequest(relabeled_variant(p, seed=rnd * 17 + i)))
+    t0 = time.perf_counter()
+    warm = engine.serve(warm_reqs)
+    warm_s = time.perf_counter() - t0
+    assert all(r.cache_hit for r in warm), "warm phase must be all hits"
+    for r in warm:
+        assert r.count == next(c.count for c in cold
+                               if c.canon_key == r.canon_key)
+    warm_lat = engine.latency_percentiles()
+
+    cache = engine.cache.stats
+    keys = {"dataset": spec["dataset"], "patterns": len(patterns)}
+    return [
+        Row("query_throughput", {**keys, "phase": "cold"},
+            len(cold) / cold_s, "queries/s",
+            {"p50_ms": cold_lat["p50_ms"], "p99_ms": cold_lat["p99_ms"],
+             "search_s": cache.search_seconds,
+             "compile_s": cache.compile_seconds}),
+        Row("query_throughput", {**keys, "phase": "warm"},
+            len(warm) / warm_s, "queries/s",
+            {"p50_ms": warm_lat["p50_ms"], "p99_ms": warm_lat["p99_ms"],
+             "hits": cache.hits, "misses": cache.misses}),
+        Row("query_throughput", {**keys, "phase": "speedup"},
+            (len(warm) / warm_s) / max(len(cold) / cold_s, 1e-12), "x",
+            {}),
+    ]
+
+
+def main(full: bool = False):
+    emit(run(full), "query_throughput")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

@@ -22,6 +22,7 @@ from . import (
     fig11_model_accuracy,
     fig12_scaling,
     kernel_intersect,
+    query_throughput,
     tab2_restrictions,
     tab3_overhead,
 )
@@ -35,6 +36,7 @@ BENCHES = {
     "fig12": fig12_scaling.main,     # scaling / load balance
     "tab3": tab3_overhead.main,      # preprocessing overhead
     "kernel": kernel_intersect.main, # Pallas intersection kernel
+    "query": query_throughput.main,  # serve path: cold vs warm queries/s
 }
 
 

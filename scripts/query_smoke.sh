@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Serve-path smoke (ISSUE 2 acceptance): a synthetic 2-pattern workload
+# on tiny-er through launch/query_serve.py.  Each pattern is followed by
+# an isomorphic relabeling of itself; --expect-min-hits asserts the
+# re-queries were plan-cache hits (no second configuration search/JIT),
+# and --verify checks every count against the pure-python oracle.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.launch.query_serve \
+  --dataset tiny-er --workload smoke --capacity 8192 \
+  --single-device --verify --expect-min-hits 2 "$@"

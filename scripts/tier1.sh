@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verify (ROADMAP.md): fast fail-fast suite.
+# Tier-1 verify (ROADMAP.md): fast fail-fast suite + serve-path smoke.
 #
 # pytest.ini deselects @pytest.mark.slow tests by default so this
 # finishes quickly; use `scripts/tier1.sh --all` (== pytest -m "")
@@ -9,6 +9,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--all" ]]; then
   shift
-  exec python -m pytest -x -q -m "" "$@"
+  python -m pytest -x -q -m "" "$@"
+else
+  python -m pytest -x -q "$@"
 fi
-exec python -m pytest -x -q "$@"
+scripts/query_smoke.sh

@@ -377,7 +377,12 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
 # --------------------------------------------------------------------------
 # public host-side drivers
 # --------------------------------------------------------------------------
-def _device_graph(graph: GraphCSR):
+def device_graph(graph: GraphCSR):
+    """Upload one graph to device memory (indptr, padded degrees, flat).
+
+    Matchers accept the returned tuple via ``arrays=`` so long-lived
+    callers (the query engine) keep ONE resident copy of the CSR shared
+    by every cached matcher instead of re-uploading per pattern."""
     degrees = np.concatenate([graph.degrees, np.zeros(1, dtype=np.int32)])
     return (
         jnp.asarray(graph.indptr),
@@ -396,13 +401,14 @@ class Matcher:
     MAX_CAPACITY = 1 << 22   # escalation ceiling (frontier RAM bound)
 
     def __init__(self, graph: GraphCSR, plan: MatchingPlan,
-                 cfg: ExecutorConfig | None = None):
+                 cfg: ExecutorConfig | None = None, *, arrays=None):
         self.graph = graph
         self.plan = plan
         self.cfg = cfg or ExecutorConfig()
         self._W = max(graph.max_degree, 1)
         self._fns: dict[int, object] = {}     # capacity -> jitted count_fn
-        self._arrays = _device_graph(graph)
+        self._arrays = arrays if arrays is not None else device_graph(graph)
+        self._capacity = self.cfg.capacity    # sticky escalated capacity
 
     def _fn(self, capacity: int):
         if capacity not in self._fns:
@@ -412,10 +418,13 @@ class Matcher:
             ))
         return self._fns[capacity]
 
-    def warmup(self) -> None:
+    def warmup(self, *, chunk: int | None = None) -> None:
+        """Compile against a sentinel frontier.  Pass the same `chunk`
+        later given to :meth:`count`, or the trace compiled here (v0
+        shape = chunk width) is not the one counting will use."""
         indptr, degrees, flat = self._arrays
-        chunk = self.cfg.capacity
-        v0 = jnp.full((chunk,), self.graph.n, dtype=jnp.int32)
+        width = min(chunk or self.cfg.capacity, self.cfg.capacity)
+        v0 = jnp.full((width,), self.graph.n, dtype=jnp.int32)
         with enable_x64(True):
             jax.block_until_ready(
                 self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
@@ -432,11 +441,15 @@ class Matcher:
             overflowed = False
             max_needed = 0
             chunk = min(chunk or cfg.capacity, cfg.capacity)
-            # spans: (start, end, capacity)
-            spans = [(s, min(s + chunk, graph.n), cfg.capacity)
+            # spans: (start, end, capacity).  Start at the last count's
+            # escalated capacity so warm repeats (the serve path) skip
+            # the doomed undersized passes.
+            cap0 = self._capacity
+            spans = [(s, min(s + chunk, graph.n), cap0)
                      for s in range(0, graph.n, chunk)]
             while spans:
                 s, e, cap = spans.pop()
+                self._capacity = max(self._capacity, cap)
                 width = min(chunk, cap)
                 v0 = jnp.arange(s, e, dtype=jnp.int32)
                 if e - s < width:
@@ -471,6 +484,109 @@ def count_embeddings(
     return Matcher(graph, plan, cfg).count(chunk=chunk)
 
 
+class ShardedMatcher:
+    """Reusable multi-device matcher: compile once per capacity, count many.
+
+    Distributed counting with outer-loop tasks striped over `axis`:
+    device d takes v0 ∈ {d, d+P, ...} (fine-grained striping — DESIGN §3);
+    with degree-descending relabeling this balances the power-law head.
+    Each device scans its stripe in fixed-size chunks; if any chunk's
+    frontier exceeds capacity, the whole pass is retried at doubled
+    capacity (straggler-free SPMD analogue of the single-device
+    bisection — every retry is a fresh collective-complete program).
+
+    The jitted shard_map program is cached per capacity, so repeat
+    counts (the serve path) pay zero compilation."""
+
+    def __init__(self, graph: GraphCSR, plan: MatchingPlan, mesh,
+                 *, axis: str = "data", cfg: ExecutorConfig | None = None,
+                 chunk: int | None = None, arrays=None):
+        self.graph = graph
+        self.plan = plan
+        self.mesh = mesh
+        self.axis = axis
+        self.cfg = cfg or ExecutorConfig()
+        self._W = max(graph.max_degree, 1)
+        self._iters = _bs_iters(self._W)
+        self._arrays = arrays if arrays is not None else device_graph(graph)
+        self.chunk = chunk or max(64, self.cfg.capacity // 16)
+        nshards = 1
+        for ax in (axis,) if isinstance(axis, str) else axis:
+            nshards *= mesh.shape[ax]
+        per = math.ceil(graph.n / nshards)
+        per = math.ceil(per / self.chunk) * self.chunk  # pad to chunk multiple
+        self._per = per
+        # striped: column-major so device d gets d, d+P, 2P+d, ...
+        v0 = np.full(nshards * per, graph.n, dtype=np.int32)
+        v0[: graph.n] = np.arange(graph.n, dtype=np.int32)
+        self._v0 = jnp.asarray(v0.reshape(per, nshards).T.reshape(-1))
+        self._fns: dict[int, object] = {}     # capacity -> jitted shard fn
+        self._capacity = self.cfg.capacity    # sticky escalated capacity
+
+    def _fn(self, capacity: int):
+        if capacity not in self._fns:
+            from jax.sharding import PartitionSpec as P
+
+            count_fn = _make_count_fn(
+                self.plan, self._W, self._iters,
+                replace(self.cfg, capacity=capacity),
+            )
+            per, chunk, axis = self._per, self.chunk, self.axis
+
+            def shard_fn(indptr, degrees, flat, v0_local):
+                chunks = v0_local.reshape(per // chunk, chunk)
+
+                def body(carry, v0c):
+                    tot, mx = carry
+                    cnt, needed = count_fn(indptr, degrees, flat, v0c)
+                    return (tot + cnt, jnp.maximum(mx, needed)), ()
+
+                init = (jnp.zeros((), jnp.int64), jnp.zeros((), jnp.int32))
+                (tot, mx), _ = jax.lax.scan(body, init, chunks)
+                return jax.lax.psum(tot, axis), jax.lax.pmax(mx, axis)
+
+            self._fns[capacity] = jax.jit(
+                shard_map(
+                    shard_fn,
+                    mesh=self.mesh,
+                    in_specs=(P(), P(), P(), P(axis)),
+                    out_specs=(P(), P()),
+                    check_vma=False,
+                )
+            )
+        return self._fns[capacity]
+
+    def warmup(self) -> None:
+        indptr, degrees, flat = self._arrays
+        # all-sentinel frontier: compiles the program without doing the
+        # real count (mirrors Matcher.warmup)
+        v0 = jnp.full_like(self._v0, self.graph.n)
+        with enable_x64(True):
+            jax.block_until_ready(
+                self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
+
+    def count(self) -> CountResult:
+        indptr, degrees, flat = self._arrays
+        # start from the last successful capacity so warm repeats skip
+        # the doomed undersized passes, not just their compilation
+        capacity = self._capacity
+        while True:
+            with enable_x64(True):
+                cnt, needed = self._fn(capacity)(indptr, degrees, flat,
+                                                 self._v0)
+                needed = int(needed)
+            if needed <= capacity or capacity >= Matcher.MAX_CAPACITY:
+                break
+            while capacity < min(needed, Matcher.MAX_CAPACITY):
+                capacity *= 2
+        self._capacity = capacity
+        return CountResult(
+            count=int(cnt) // self.plan.iep_divisor,
+            overflowed=needed > capacity,
+            max_needed=needed,
+        )
+
+
 def count_embeddings_sharded(
     graph: GraphCSR,
     plan: MatchingPlan,
@@ -480,71 +596,10 @@ def count_embeddings_sharded(
     cfg: ExecutorConfig | None = None,
     chunk: int | None = None,
 ) -> CountResult:
-    """Distributed counting: outer-loop tasks striped over `axis`.
-
-    Device d takes v0 ∈ {d, d+P, ...} (fine-grained striping — DESIGN §3);
-    with degree-descending relabeling this balances the power-law head.
-    Each device scans its stripe in fixed-size chunks; if any chunk's
-    frontier exceeds capacity, the whole pass is retried at doubled
-    capacity (straggler-free SPMD analogue of the single-device
-    bisection — every retry is a fresh collective-complete program)."""
-    from jax.sharding import PartitionSpec as P
-
-    cfg = cfg or ExecutorConfig()
-    W = max(graph.max_degree, 1)
-    iters = _bs_iters(W)
-    indptr, degrees, flat = _device_graph(graph)
-    nshards = 1
-    for ax in (axis,) if isinstance(axis, str) else axis:
-        nshards *= mesh.shape[ax]
-    chunk = chunk or max(64, cfg.capacity // 16)
-    per = math.ceil(graph.n / nshards)
-    per = math.ceil(per / chunk) * chunk          # pad to chunk multiple
-    # striped: column-major so device d gets d, d+P, 2P+d, ...
-    v0 = np.full(nshards * per, graph.n, dtype=np.int32)
-    v0[: graph.n] = np.arange(graph.n, dtype=np.int32)
-    v0 = v0.reshape(per, nshards).T.reshape(-1)   # stripe assignment
-
-    capacity = cfg.capacity
-    while True:
-        count_fn = _make_count_fn(
-            plan, W, iters, replace(cfg, capacity=capacity)
-        )
-
-        def shard_fn(indptr, degrees, flat, v0_local):
-            chunks = v0_local.reshape(per // chunk, chunk)
-
-            def body(carry, v0c):
-                tot, mx = carry
-                cnt, needed = count_fn(indptr, degrees, flat, v0c)
-                return (tot + cnt, jnp.maximum(mx, needed)), ()
-
-            init = (jnp.zeros((), jnp.int64), jnp.zeros((), jnp.int32))
-            (tot, mx), _ = jax.lax.scan(body, init, chunks)
-            return jax.lax.psum(tot, axis), jax.lax.pmax(mx, axis)
-
-        with enable_x64(True):
-            spec = P(axis)
-            fn = jax.jit(
-                shard_map(
-                    shard_fn,
-                    mesh=mesh,
-                    in_specs=(P(), P(), P(), spec),
-                    out_specs=(P(), P()),
-                    check_vma=False,
-                )
-            )
-            cnt, needed = fn(indptr, degrees, flat, jnp.asarray(v0))
-            needed = int(needed)
-        if needed <= capacity or capacity >= Matcher.MAX_CAPACITY:
-            break
-        while capacity < min(needed, Matcher.MAX_CAPACITY):
-            capacity *= 2
-    return CountResult(
-        count=int(cnt) // plan.iep_divisor,
-        overflowed=needed > capacity,
-        max_needed=needed,
-    )
+    """One-shot convenience wrapper around :class:`ShardedMatcher`."""
+    return ShardedMatcher(
+        graph, plan, mesh, axis=axis, cfg=cfg, chunk=chunk
+    ).count()
 
 
 # --------------------------------------------------------------------------

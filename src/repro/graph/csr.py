@@ -8,6 +8,7 @@ tests with a vectorized per-segment binary search.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
 from functools import cached_property
 
@@ -81,6 +82,20 @@ class GraphCSR:
     @cached_property
     def max_degree(self) -> int:
         return int(self.degrees.max()) if self.n else 0
+
+    @cached_property
+    def fingerprint(self) -> str:
+        """Stable content hash of the adjacency structure (not the name).
+
+        Cache keys in the query subsystem (DESIGN.md §5) use this to
+        invalidate plans when the resident graph changes; two loads of
+        the same edge list (any name) share one fingerprint."""
+        h = hashlib.sha256()
+        h.update(f"{self.n}|{self.m}|".encode())
+        h.update(np.ascontiguousarray(self.indptr).tobytes())
+        h.update(np.ascontiguousarray(self.indices[: self.indptr[-1]])
+                 .tobytes())
+        return h.hexdigest()
 
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v] : self.indptr[v + 1]]

@@ -123,7 +123,7 @@ def lower_graphpi(mesh, mesh_name: str, *, buckets: bool | None = None):
     single-window baseline)."""
     from ..core.config_search import search_configuration
     from ..core.executor import (
-        ExecutorConfig, _bs_iters, _device_graph, _make_count_fn,
+        ExecutorConfig, _bs_iters, _make_count_fn, device_graph,
         auto_buckets,
     )
     from ..core.pattern import house
@@ -143,7 +143,7 @@ def lower_graphpi(mesh, mesh_name: str, *, buckets: bool | None = None):
     )
     W = max(g.max_degree, 1)
     count_fn = _make_count_fn(plan, W, _bs_iters(W), cfg)
-    indptr, degrees, flat = (np.asarray(x) for x in _device_graph(g))
+    indptr, degrees, flat = (np.asarray(x) for x in device_graph(g))
 
     axes = [a for a in mesh.axis_names if a != "model"]
     nsh = int(np.prod([mesh.shape[a] for a in axes]))

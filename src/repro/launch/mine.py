@@ -9,12 +9,16 @@ schedule generation → performance-model configuration selection → JAX
 compilation → distributed counting (shard_map over the host mesh's data
 axis, fine-grained task striping).  `--mode graphzero` runs the baseline
 (single restriction set, degree-heuristic schedule) for comparison.
+
+Since the query-serving subsystem landed, this CLI is a one-request
+client of the same `PlanCache`/`QueryEngine` code path that
+`launch/query_serve.py` serves traffic through — there is exactly one
+request path.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 
@@ -34,70 +38,40 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from ..configs.graphpi import get_dataset, get_pattern
-    from ..core.config_search import graphzero_configuration, search_configuration
-    from ..core.executor import (
-        ExecutorConfig, compute_stats, count_embeddings,
-        count_embeddings_sharded,
-    )
-    from ..core.plan import build_plan
-    from ..core.restrictions import generate_restriction_sets
+    from ..core.executor import ExecutorConfig
     from ..launch.mesh import make_host_mesh
+    from ..query import QueryEngine, QueryRequest
 
     pattern = get_pattern(args.pattern)
     graph = get_dataset(args.dataset)
-    cfg = ExecutorConfig(capacity=args.capacity)
     print(f"[mine] pattern={pattern.name} (n={pattern.n}, m={pattern.m}, "
           f"|Aut|={pattern.aut_count()})  graph={graph.name} "
           f"(|V|={graph.n}, |E|={graph.m}, max_deg={graph.max_degree})")
 
-    # -- preprocessing (paper: configuration generation + prediction) -------
-    t0 = time.perf_counter()
-    stats = compute_stats(graph, cfg)
-    t_stats = time.perf_counter() - t0
-    print(f"[mine] stats: tri_cnt={stats.tri_cnt} ({t_stats:.2f}s)")
-
-    t0 = time.perf_counter()
-    if args.mode == "graphpi":
-        res = search_configuration(pattern, stats, use_iep=args.use_iep)
-        best = res.best
-        print(f"[mine] searched {len(res.all_configs)} configurations "
-              f"({res.n_schedules} schedules × {res.n_restriction_sets} "
-              f"restriction sets) in {res.preprocess_seconds:.3f}s")
-    elif args.mode == "graphzero":
-        best = graphzero_configuration(pattern, stats, use_iep=args.use_iep)
-    else:  # naive: no restrictions; divide by |Aut| afterwards
-        res = search_configuration(pattern, stats, use_iep=False)
-        best = res.best
-    t_pre = time.perf_counter() - t0
-
-    res_set = () if args.mode == "naive" else best.res_set
-    plan = build_plan(pattern, best.order, res_set, iep_k=best.iep_k)
-    print(f"[mine] config: schedule={best.order} restrictions={res_set} "
-          f"iep_k={best.iep_k} predicted_cost={best.predicted_cost:.3e} "
-          f"(preprocess {t_pre:.3f}s)")
-
-    # -- distributed counting ------------------------------------------------
-    t0 = time.perf_counter()
-    if args.single_device or len(jax.devices()) == 1:
-        out = count_embeddings(graph, plan, cfg)
-    else:
+    mesh = None
+    if not args.single_device and len(jax.devices()) > 1:
         mesh = make_host_mesh(model=args.model_axis)
-        out = count_embeddings_sharded(graph, plan, mesh, cfg=cfg)
-    dt = time.perf_counter() - t0
-    count = out.count // pattern.aut_count() if args.mode == "naive" else out.count
+    engine = QueryEngine(graph, cfg=ExecutorConfig(capacity=args.capacity),
+                         mesh=mesh)
+    print(f"[mine] stats: tri_cnt={engine.stats.tri_cnt} "
+          f"({engine.stats_seconds:.2f}s)")
 
-    print(f"[mine] count={count}  wall={dt:.3f}s  "
-          f"(max frontier rows used: {out.max_needed}"
-          f"{', OVERFLOWED' if out.overflowed else ''})")
+    res = engine.submit(QueryRequest(
+        pattern, use_iep=args.use_iep, verify=args.verify, mode=args.mode))
+    print(f"[mine] config: schedule={res.order} restrictions={res.res_set} "
+          f"iep_k={res.iep_k} (search {res.search_seconds:.3f}s, "
+          f"compile {res.compile_seconds:.3f}s, "
+          f"{'cache hit' if res.cache_hit else 'cache miss'})")
+    exec_s = res.latency_s - res.search_seconds - res.compile_seconds
+    print(f"[mine] count={res.count}  wall={exec_s:.3f}s  "
+          f"(query latency {res.latency_s:.3f}s incl. search+compile; "
+          f"max frontier rows used: {res.max_needed}"
+          f"{', OVERFLOWED' if res.overflowed else ''})")
 
     if args.verify:
-        from ..core.oracle import count_embeddings_oracle
-
-        t0 = time.perf_counter()
-        expect = count_embeddings_oracle(graph.n, graph.edge_array(), pattern)
-        print(f"[mine] oracle={expect} ({time.perf_counter() - t0:.2f}s)  "
-              f"{'OK' if expect == count else 'MISMATCH'}")
-        if expect != count:
+        print(f"[mine] oracle={res.expected}  "
+              f"{'OK' if res.verified else 'MISMATCH'}")
+        if not res.verified:
             return 1
     return 0
 

@@ -1,0 +1,17 @@
+# Pattern-query serving subsystem (DESIGN.md §5): canonical pattern
+# identity (canon), plan/matcher memoization (cache), and the batched
+# request engine over a resident graph (engine).
+from .canon import canonical_form, canonical_key, relabeled_variant
+from .cache import CacheEntry, PlanCache
+from .engine import QueryEngine, QueryRequest, QueryResult
+
+__all__ = [
+    "CacheEntry",
+    "PlanCache",
+    "QueryEngine",
+    "QueryRequest",
+    "QueryResult",
+    "canonical_form",
+    "canonical_key",
+    "relabeled_variant",
+]

@@ -1,0 +1,218 @@
+"""PlanCache — memoized compilation pipeline for pattern queries.
+
+A cold pattern query pays three plan-time costs the batch CLI used to
+re-pay on every invocation: the configuration search (schedules ×
+restriction sets × IEP ranked by the perf model), the MatchingPlan
+build, and the executor JIT.  The cache pays them once per *isomorphism
+class* and replays the warmed matcher afterwards.
+
+Cache key (DESIGN.md §5):
+  (canonical pattern key,
+   graph-stats fingerprint   — CSR content hash + (|V|, |E|, tri_cnt),
+   executor fingerprint      — capacity, dynamic_base, resolved pallas
+                               path, bucket layout, sharded?,
+   mode, use_iep)
+Anything that changes the searched configuration or the compiled
+program invalidates the entry by construction; eviction beyond
+`max_entries` is LRU.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, replace as dc_replace
+
+from ..core.config_search import (
+    Configuration, graphzero_configuration, search_configuration,
+)
+from ..core.executor import (
+    CountResult, ExecutorConfig, Matcher, ShardedMatcher,
+)
+from ..core.pattern import Pattern
+from ..core.perf_model import GraphStats
+from ..core.plan import MatchingPlan, build_plan
+from ..graph.csr import GraphCSR
+from .canon import canonical_form, canonical_key
+
+MODES = ("graphpi", "graphzero", "naive")
+
+# Default LRU bound for serving engines: each entry pins a warmed jitted
+# executable (plus stripe arrays when sharded), so an unbounded cache on
+# an arbitrary request stream is a memory leak.  Evicted classes just
+# pay cold cost again.
+DEFAULT_MAX_ENTRIES = 256
+
+
+def executor_fingerprint(cfg: ExecutorConfig) -> tuple:
+    """The ExecutorConfig facets baked into a jitted count program."""
+    return (cfg.capacity, cfg.dynamic_base, cfg.resolve_use_pallas(),
+            cfg.degree_buckets)
+
+
+def layout_fingerprint(mesh, axis, chunk: int | None,
+                       cfg: ExecutorConfig) -> tuple:
+    """Execution-layout part of the cache key: the facets a compiled
+    program bakes in beyond ExecutorConfig.  Sharded, that is the mesh
+    devices, collective axis, and stripe chunk; single-device it is the
+    outer-loop chunk width (the warmed trace's v0 shape).  `chunk` is
+    resolved exactly like the matchers resolve it, so chunk=None and an
+    explicitly-passed default don't alias into two entries for one
+    identical program."""
+    if mesh is None:
+        return ("single", min(chunk or cfg.capacity, cfg.capacity))
+    return (
+        "sharded",
+        axis if isinstance(axis, str) else tuple(axis),
+        int(chunk or max(64, cfg.capacity // 16)),
+        tuple((str(k), int(v)) for k, v in mesh.shape.items()),
+        tuple(str(d) for d in mesh.devices.flat),
+    )
+
+
+def graph_fingerprint(graph: GraphCSR, stats: GraphStats) -> tuple:
+    return (graph.fingerprint, stats.n_vertices, stats.n_edges,
+            stats.tri_cnt)
+
+
+@dataclass
+class CacheEntry:
+    canon_key: str
+    pattern: Pattern            # canonical labeling (name = first requester)
+    config: Configuration
+    plan: MatchingPlan
+    matcher: object             # warmed Matcher | ShardedMatcher
+    sharded: bool
+    mode: str
+    search_seconds: float
+    compile_seconds: float
+    hits: int = 0
+
+    def count(self, *, chunk: int | None = None) -> CountResult:
+        """Execute the cached program.  `chunk` stripes the outer vertex
+        loop on the single-device path (the sharded matcher fixed its
+        stripe layout at build time)."""
+        if self.sharded:
+            out = self.matcher.count()
+        else:
+            out = self.matcher.count(chunk=chunk)
+        if self.mode == "naive":
+            # no restrictions compiled in: every embedding found |Aut| times
+            out = dc_replace(out, count=out.count // self.pattern.aut_count())
+        return out
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    n_searches: int = 0
+    n_compiles: int = 0
+    evictions: int = 0
+    search_seconds: float = 0.0
+    compile_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class PlanCache:
+    """LRU cache of warmed (Configuration, MatchingPlan, Matcher) triples."""
+
+    def __init__(self, *, max_entries: int | None = None):
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> list[CacheEntry]:
+        return list(self._entries.values())
+
+    @staticmethod
+    def entry_key(pattern: Pattern, graph_fp: tuple, cfg: ExecutorConfig,
+                  *, mode: str = "graphpi", use_iep: bool = False,
+                  layout_fp: tuple | None = None) -> tuple:
+        if layout_fp is None:
+            layout_fp = layout_fingerprint(None, "data", None, cfg)
+        # naive ignores use_iep (it always searches without IEP), so the
+        # flag must not split one compiled program into two entries
+        use_iep = bool(use_iep) and mode != "naive"
+        return (canonical_key(pattern), graph_fp,
+                executor_fingerprint(cfg), mode, use_iep, layout_fp)
+
+    def get_or_build(
+        self,
+        pattern: Pattern,
+        graph: GraphCSR,
+        stats: GraphStats,
+        *,
+        cfg: ExecutorConfig | None = None,
+        mesh=None,
+        axis: str = "data",
+        mode: str = "graphpi",
+        use_iep: bool = False,
+        chunk: int | None = None,
+        arrays=None,
+        warm: bool = True,
+    ) -> tuple[CacheEntry, bool]:
+        """Return (entry, was_hit).  Misses run the configuration search,
+        build the plan, and (when `warm`) JIT-compile the matcher before
+        the entry becomes visible — a hit NEVER searches or compiles."""
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; have {MODES}")
+        cfg = cfg or ExecutorConfig()
+        key = self.entry_key(
+            pattern, graph_fingerprint(graph, stats), cfg,
+            mode=mode, use_iep=use_iep,
+            layout_fp=layout_fingerprint(mesh, axis, chunk, cfg),
+        )
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.stats.hits += 1
+            entry.hits += 1
+            self._entries.move_to_end(key)
+            return entry, True
+
+        self.stats.misses += 1
+        canon = canonical_form(pattern)
+        t0 = time.perf_counter()
+        if mode == "graphpi":
+            config = search_configuration(canon, stats, use_iep=use_iep).best
+        elif mode == "graphzero":
+            config = graphzero_configuration(canon, stats, use_iep=use_iep)
+        else:  # naive: no restrictions; entry.count divides by |Aut|
+            config = search_configuration(canon, stats, use_iep=False).best
+        search_s = time.perf_counter() - t0
+        self.stats.n_searches += 1
+        self.stats.search_seconds += search_s
+
+        res_set = () if mode == "naive" else config.res_set
+        plan = build_plan(canon, config.order, res_set, iep_k=config.iep_k)
+        if mesh is not None:
+            matcher = ShardedMatcher(graph, plan, mesh, axis=axis, cfg=cfg,
+                                     chunk=chunk, arrays=arrays)
+        else:
+            matcher = Matcher(graph, plan, cfg, arrays=arrays)
+        compile_s = 0.0
+        if warm:
+            t0 = time.perf_counter()
+            if mesh is not None:
+                matcher.warmup()          # chunk is baked into the stripes
+            else:
+                matcher.warmup(chunk=chunk)
+            compile_s = time.perf_counter() - t0
+            self.stats.n_compiles += 1
+            self.stats.compile_seconds += compile_s
+
+        entry = CacheEntry(
+            canon_key=key[0], pattern=canon, config=config, plan=plan,
+            matcher=matcher, sharded=mesh is not None, mode=mode,
+            search_seconds=search_s, compile_seconds=compile_s,
+        )
+        self._entries[key] = entry
+        if self.max_entries is not None:
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return entry, False

@@ -1,0 +1,177 @@
+"""QueryEngine — the batched pattern-count request path.
+
+Loads a dataset ONCE: the CSR is uploaded to device memory a single
+time (shared by every cached matcher via ``arrays=``), graph statistics
+are computed once at startup, and when the process has multiple JAX
+devices the graph stays resident on the mesh with the executor's
+fine-grained outer-loop striping (`ShardedMatcher`).  Requests then
+stream through the `PlanCache`: the first query of an isomorphism
+class pays configuration search + JIT, repeats replay the warmed
+program.  Per-query wall latency is recorded; `summary()` reports
+p50/p99 plus the cache counters that prove hits never re-search or
+re-compile.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.executor import ExecutorConfig, compute_stats, device_graph
+from ..core.pattern import Pattern
+from ..core.perf_model import GraphStats
+from ..graph.csr import GraphCSR
+from .cache import DEFAULT_MAX_ENTRIES, PlanCache
+
+
+@dataclass(frozen=True)
+class QueryRequest:
+    """One pattern-count request (per-request options ride along)."""
+
+    pattern: Pattern
+    use_iep: bool = False
+    verify: bool = False          # check against the pure-python oracle
+    mode: str = "graphpi"
+
+
+@dataclass
+class QueryResult:
+    pattern_name: str
+    canon_key: str
+    count: int
+    latency_s: float              # wall time incl. cache miss costs
+    cache_hit: bool
+    mode: str
+    use_iep: bool
+    order: tuple
+    res_set: tuple
+    iep_k: int
+    search_seconds: float         # 0.0 on a hit
+    compile_seconds: float        # 0.0 on a hit
+    overflowed: bool
+    max_needed: int
+    expected: int | None = None   # oracle count when verified
+    verified: bool | None = None  # None = not requested
+
+    def line(self) -> str:
+        """One human-readable serving-log line."""
+        v = ("" if self.verified is None
+             else ("  verify=OK" if self.verified else "  verify=MISMATCH"))
+        o = "  OVERFLOWED" if self.overflowed else ""
+        return (f"{self.pattern_name:<16} count={self.count:<12} "
+                f"{'HIT ' if self.cache_hit else 'MISS'} "
+                f"lat={self.latency_s * 1e3:8.1f}ms "
+                f"(search={self.search_seconds:.3f}s "
+                f"compile={self.compile_seconds:.3f}s){v}{o}")
+
+
+class QueryEngine:
+    """Serve pattern-count queries over one resident graph.
+
+    Parameters
+    ----------
+    graph:   the data graph, loaded once.
+    cfg:     executor configuration shared by every cached matcher
+             (part of the cache key).
+    mesh:    optional JAX mesh; when given, counting runs sharded over
+             `axis` with the CSR resident mesh-wide.
+    chunk:   vertex-chunk striping of the outer loop — smaller chunks
+             bound frontier memory and give the overflow bisection finer
+             grain at the price of more kernel dispatches per query
+             (latency/footprint trade-off, DESIGN.md §5).
+    """
+
+    def __init__(self, graph: GraphCSR, *, cfg: ExecutorConfig | None = None,
+                 mesh=None, axis: str = "data", chunk: int | None = None,
+                 cache: PlanCache | None = None,
+                 stats: GraphStats | None = None):
+        self.graph = graph
+        self.cfg = cfg or ExecutorConfig()
+        self.mesh = mesh
+        self.axis = axis
+        self.chunk = chunk
+        self.cache = cache or PlanCache(max_entries=DEFAULT_MAX_ENTRIES)
+        self._arrays = device_graph(graph)     # ONE resident CSR upload
+        t0 = time.perf_counter()
+        self.stats = stats if stats is not None else compute_stats(
+            graph, self.cfg)
+        self.stats_seconds = time.perf_counter() - t0
+        self._latencies: list[float] = []
+        self._edges = None                     # lazy, for oracle verification
+        self._oracle: dict[str, int] = {}      # canon_key -> oracle count
+
+    # ------------------------------------------------------------- serving
+    def submit(self, request: QueryRequest) -> QueryResult:
+        t0 = time.perf_counter()
+        entry, hit = self.cache.get_or_build(
+            request.pattern, self.graph, self.stats,
+            cfg=self.cfg, mesh=self.mesh, axis=self.axis,
+            mode=request.mode, use_iep=request.use_iep,
+            chunk=self.chunk, arrays=self._arrays,
+        )
+        out = entry.count(chunk=self.chunk)
+        latency = time.perf_counter() - t0
+        self._latencies.append(latency)
+
+        expected = verified = None
+        if request.verify:
+            # oracle counts are isomorphism-invariant — memoize per class
+            if entry.canon_key not in self._oracle:
+                from ..core.oracle import count_embeddings_oracle
+
+                if self._edges is None:
+                    self._edges = self.graph.edge_array()
+                self._oracle[entry.canon_key] = count_embeddings_oracle(
+                    self.graph.n, self._edges, request.pattern)
+            expected = self._oracle[entry.canon_key]
+            verified = expected == out.count
+        return QueryResult(
+            pattern_name=request.pattern.name or "anon",
+            canon_key=entry.canon_key,
+            count=out.count,
+            latency_s=latency,
+            cache_hit=hit,
+            mode=request.mode,
+            use_iep=request.use_iep,
+            order=entry.config.order,
+            res_set=entry.plan.res_set,
+            iep_k=entry.config.iep_k,
+            search_seconds=0.0 if hit else entry.search_seconds,
+            compile_seconds=0.0 if hit else entry.compile_seconds,
+            overflowed=out.overflowed,
+            max_needed=out.max_needed,
+            expected=expected,
+            verified=verified,
+        )
+
+    def serve(self, requests) -> list[QueryResult]:
+        return [self.submit(r) for r in requests]
+
+    # ------------------------------------------------------------- reporting
+    def reset_latencies(self) -> None:
+        """Start a fresh latency window (e.g. between benchmark phases);
+        cache state and counters are untouched."""
+        self._latencies.clear()
+
+    def latency_percentiles(self) -> dict:
+        lat = np.asarray(self._latencies, dtype=float)
+        if lat.size == 0:
+            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+        return {
+            "n": int(lat.size),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3),
+        }
+
+    def summary(self) -> dict:
+        return {
+            "graph": self.graph.name,
+            "devices": 1 if self.mesh is None else int(
+                np.prod(list(self.mesh.shape.values()))),
+            "stats_seconds": self.stats_seconds,
+            "latency": self.latency_percentiles(),
+            "cache": self.cache.stats.as_dict(),
+            "cache_entries": len(self.cache),
+        }

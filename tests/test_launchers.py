@@ -19,6 +19,34 @@ def test_mine_graphzero_and_naive_agree():
                  "--mode", "naive", "--verify", "--single-device"]) == 0
 
 
+@pytest.mark.slow  # tier1.sh already runs this workload via query_smoke.sh
+def test_query_serve_launcher_smoke():
+    from repro.launch.query_serve import main
+
+    rc = main(["--dataset", "tiny-er", "--workload", "smoke",
+               "--capacity", str(1 << 13), "--single-device", "--verify",
+               "--expect-min-hits", "1"])
+    assert rc == 0
+
+
+def test_query_serve_request_file(tmp_path):
+    import json
+
+    from repro.launch.query_serve import main
+
+    reqs = tmp_path / "reqs.jsonl"
+    reqs.write_text("\n".join([
+        json.dumps({"pattern": "P1", "verify": True}),
+        json.dumps({"pattern": {"n": 3, "edges": [[2, 1], [0, 2], [1, 0]]},
+                    "verify": True}),
+        json.dumps({"pattern": "P1", "verify": True}),   # exact re-query: hit
+    ]))
+    rc = main(["--dataset", "tiny-er", "--requests", str(reqs),
+               "--capacity", str(1 << 13), "--single-device",
+               "--expect-min-hits", "1"])
+    assert rc == 0
+
+
 def test_serve_launcher_smoke():
     from repro.launch.serve import main
 

@@ -1,0 +1,161 @@
+"""Query subsystem: canonicalization, plan cache, serving engine."""
+import numpy as np
+import pytest
+
+from repro.configs.graphpi import EXTRA_PATTERNS, PATTERNS, get_pattern
+from repro.core.executor import ExecutorConfig, compute_stats
+from repro.core.oracle import count_embeddings_oracle
+from repro.core.pattern import Pattern, cycle, path, star
+from repro.graph.datasets import erdos_renyi
+from repro.query import (
+    PlanCache, QueryEngine, QueryRequest, canonical_form, canonical_key,
+    relabeled_variant,
+)
+
+CFG = ExecutorConfig(capacity=1 << 12)
+
+
+@pytest.fixture(scope="module")
+def tiny_graph():
+    return erdos_renyi(64, 256, seed=7, name="er64")
+
+
+@pytest.fixture(scope="module")
+def engine(tiny_graph):
+    return QueryEngine(tiny_graph, cfg=CFG)
+
+
+# ------------------------------------------------------------- canonicalization
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_isomorphic_variants_hash_identically(name):
+    p = get_pattern(name)
+    key = canonical_key(p)
+    for seed in range(4):
+        v = relabeled_variant(p, seed=seed)
+        assert canonical_key(v) == key, (name, seed)
+
+
+def test_canonical_form_is_isomorphic_and_idempotent():
+    for name in sorted(PATTERNS) + sorted(EXTRA_PATTERNS):
+        p = get_pattern(name)
+        form = canonical_form(p)
+        assert form.n == p.n and form.m == p.m
+        assert sorted(form.degree(v) for v in range(form.n)) == \
+            sorted(p.degree(v) for v in range(p.n))
+        assert canonical_key(form) == canonical_key(p)
+        assert canonical_form(form).edges == form.edges
+
+
+def test_non_isomorphic_patterns_never_collide():
+    pats = {name: get_pattern(name)
+            for name in sorted(PATTERNS) + sorted(EXTRA_PATTERNS)}
+    pats["path5"] = path(5)
+    pats["star5"] = star(5)
+    pats["cycle7"] = cycle(7)
+    keys = {name: canonical_key(p) for name, p in pats.items()}
+    names = sorted(pats)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            assert keys[a] != keys[b], (a, b)
+
+
+def test_canonical_key_is_stable_across_processes():
+    # regression pin: sha256 of the canonical form must never drift, or
+    # persisted / cross-replica cache keys go stale silently
+    assert canonical_key(get_pattern("triangle")) == canonical_key(
+        Pattern(3, ((2, 1), (0, 2), (1, 0))))
+    assert canonical_key(cycle(4)) == \
+        "09936e89b622b79de515caad45084940c92ed6845cd3c709570a28e22cf7ac72"
+
+
+# ----------------------------------------------------------------- plan cache
+def test_cache_hit_on_isomorphic_requery(engine):
+    r0 = engine.submit(QueryRequest(get_pattern("P1")))
+    searches = engine.cache.stats.n_searches
+    compiles = engine.cache.stats.n_compiles
+    r1 = engine.submit(QueryRequest(relabeled_variant(get_pattern("P1"), 11)))
+    assert r1.cache_hit
+    assert r1.canon_key == r0.canon_key
+    assert r1.count == r0.count
+    # a hit never re-searches or re-compiles
+    assert engine.cache.stats.n_searches == searches
+    assert engine.cache.stats.n_compiles == compiles
+    assert r1.search_seconds == 0.0 and r1.compile_seconds == 0.0
+
+
+def test_cache_key_separates_options(tiny_graph):
+    stats = compute_stats(tiny_graph, CFG)
+    from repro.query.cache import graph_fingerprint
+
+    fp = graph_fingerprint(tiny_graph, stats)
+    p = get_pattern("P2")
+    base = PlanCache.entry_key(p, fp, CFG)
+    assert PlanCache.entry_key(relabeled_variant(p, 3), fp, CFG) == base
+    assert PlanCache.entry_key(p, fp, CFG, use_iep=True) != base
+    assert PlanCache.entry_key(p, fp, CFG, mode="naive") != base
+    # naive ignores use_iep: the flag must not split the entry
+    assert PlanCache.entry_key(p, fp, CFG, mode="naive", use_iep=True) == \
+        PlanCache.entry_key(p, fp, CFG, mode="naive")
+    from repro.query.cache import layout_fingerprint
+
+    # chunk width is part of the compiled trace → part of the key; None
+    # and the explicit default resolve to the SAME fingerprint
+    assert layout_fingerprint(None, "data", None, CFG) == \
+        layout_fingerprint(None, "data", CFG.capacity, CFG)
+    assert PlanCache.entry_key(
+        p, fp, CFG, layout_fp=layout_fingerprint(None, "data", 512, CFG)
+    ) != base
+    shard_a = ("sharded", "data", 64, (("data", 2),), ("cpu:0", "cpu:1"))
+    shard_b = ("sharded", "data", 512, (("data", 2),), ("cpu:0", "cpu:1"))
+    assert PlanCache.entry_key(p, fp, CFG, layout_fp=shard_a) != base
+    # different stripe chunk = different compiled program = different entry
+    assert PlanCache.entry_key(p, fp, CFG, layout_fp=shard_a) != \
+        PlanCache.entry_key(p, fp, CFG, layout_fp=shard_b)
+    assert PlanCache.entry_key(
+        p, fp, ExecutorConfig(capacity=1 << 13)) != base
+    other = erdos_renyi(64, 256, seed=8, name="er64b")
+    assert PlanCache.entry_key(
+        p, graph_fingerprint(other, stats), CFG) != base
+
+
+def test_cache_lru_eviction(tiny_graph):
+    stats = compute_stats(tiny_graph, CFG)
+    cache = PlanCache(max_entries=2)
+    for name in ("triangle", "rectangle", "clique4"):
+        cache.get_or_build(get_pattern(name), tiny_graph, stats,
+                           cfg=CFG, warm=False)
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    # triangle was evicted → rebuilding it is a miss
+    _, hit = cache.get_or_build(get_pattern("triangle"), tiny_graph, stats,
+                                cfg=CFG, warm=False)
+    assert not hit
+
+
+# -------------------------------------------------------------------- engine
+@pytest.mark.parametrize("name,use_iep", [
+    ("P1", False), ("P2", True), ("triangle", False), ("rectangle", True),
+])
+def test_engine_counts_match_oracle(engine, tiny_graph, name, use_iep):
+    res = engine.submit(QueryRequest(get_pattern(name), use_iep=use_iep,
+                                     verify=True))
+    assert res.verified, (res.count, res.expected)
+    assert res.count == count_embeddings_oracle(
+        tiny_graph.n, tiny_graph.edge_array(), get_pattern(name))
+    assert not res.overflowed
+
+
+def test_engine_modes_agree(engine):
+    p = get_pattern("P4")
+    counts = {mode: engine.submit(QueryRequest(p, mode=mode)).count
+              for mode in ("graphpi", "graphzero", "naive")}
+    assert len(set(counts.values())) == 1, counts
+
+
+def test_engine_summary_reports_latencies(engine):
+    engine.submit(QueryRequest(get_pattern("triangle")))
+    s = engine.summary()
+    assert s["latency"]["n"] >= 1
+    assert s["latency"]["p99_ms"] >= s["latency"]["p50_ms"] >= 0.0
+    assert s["cache"]["misses"] >= 1
+    assert s["cache_entries"] == s["cache"]["misses"] - s["cache"]["evictions"]
