@@ -5,10 +5,23 @@ selected by the performance model; toggle ONLY the IEP folding of the
 independent tail.  The win grows with candidate-set size, so the
 star-family patterns (tail candidate set = a whole neighborhood) show
 the paper's 100-1000× regime even on small graphs.
+
+Two registered variants (benchmarks/run.py):
+
+  fig10        enum vs IEP on the default execution path (portable on
+               CPU, fused Pallas on TPU) — the paper's figure.
+  fig10_fused  IEP separate-sweep vs fused-tail: the same IEP plan
+               executed with the prefix corrections as per-position
+               binary-search sweeps (portable path) vs folded into the
+               level-expansion kernel's signed count (use_pallas=True —
+               DESIGN.md §4).  On CPU the fused path runs in interpret
+               mode, so only the trajectory of the curve is meaningful
+               there; on TPU the timing is real.
 """
 from __future__ import annotations
 
 from repro.core.config_search import search_configuration
+from repro.core.executor import ExecutorConfig, auto_buckets
 from repro.core.plan import best_iep_k, build_plan
 
 from ._util import Row, emit, get_pattern, graph_of, stats_of, timed_count
@@ -16,6 +29,12 @@ from ._util import Row, emit, get_pattern, graph_of, stats_of, timed_count
 QUICK = {"patterns": ["P1", "P4", "star4", "fig6"], "datasets": ["tiny-er"]}
 FULL = {"patterns": ["P1", "P2", "P4", "star4", "star5", "fig6", "P6"],
         "datasets": ["tiny-er", "small-rmat"]}
+
+# interpret-mode Pallas is orders slower than compiled TPU code, so the
+# fused-tail variant keeps a deliberately small quick tier on CPU
+FUSED_QUICK = {"patterns": ["star4"], "datasets": ["tiny-er"]}
+FUSED_FULL = {"patterns": ["star4", "star5", "P4"],
+              "datasets": ["tiny-er", "small-rmat"]}
 
 
 def run(full: bool = False, repeats: int = 2) -> list[Row]:
@@ -44,6 +63,43 @@ def run(full: bool = False, repeats: int = 2) -> list[Row]:
     return rows
 
 
+def run_fused(full: bool = False, repeats: int = 1,
+              capacity: int = 1 << 12) -> list[Row]:
+    """IEP tail: separate-sweep (portable binary searches per prefix
+    position per union) vs fused (prefix corrections folded into the
+    level-expansion kernel's signed count — one pass per union/bucket).
+    Counts must stay bit-identical; the speedup column is the win the
+    fusion buys on the SAME plan."""
+    spec = FUSED_FULL if full else FUSED_QUICK
+    rows: list[Row] = []
+    for ds in spec["datasets"]:
+        graph, stats = graph_of(ds), stats_of(ds)
+        buckets = auto_buckets(graph)
+        for pname in spec["patterns"]:
+            pattern = _pattern(pname)
+            res = search_configuration(pattern, stats)
+            best = res.best
+            k = best_iep_k(pattern, best.order, best.res_set)
+            if k < 2:
+                continue                   # no foldable tail
+            plan = build_plan(pattern, best.order, best.res_set, iep_k=k)
+            c_sep, t_sep = timed_count(
+                graph, plan, repeats=repeats,
+                cfg=ExecutorConfig(capacity=capacity, use_pallas=False,
+                                   degree_buckets=buckets))
+            c_fused, t_fused = timed_count(
+                graph, plan, repeats=repeats,
+                cfg=ExecutorConfig(capacity=capacity, use_pallas=True,
+                                   degree_buckets=buckets))
+            assert c_sep == c_fused, (pname, ds, c_sep, c_fused)
+            rows.append(Row("fig10_fused", {"dataset": ds, "pattern": pname},
+                            t_sep / t_fused, "speedup", {
+                "iep_k": k, "t_separate_s": t_sep, "t_fused_s": t_fused,
+                "count": c_fused,
+            }))
+    return rows
+
+
 def _pattern(name: str):
     from repro.core.pattern import star
 
@@ -56,6 +112,10 @@ def _pattern(name: str):
 
 def main(full: bool = False):
     emit(run(full), "fig10_iep")
+
+
+def main_fused(full: bool = False):
+    emit(run_fused(full), "fig10_fused")
 
 
 if __name__ == "__main__":

@@ -83,64 +83,100 @@ LEVEL_SHAPES_FULL = [(256, 128, 3, 128), (512, 128, 4, 256),
 
 
 def _level_data(B, D, P, L, E=2, seed=0):
+    """CSR-layout level data: one flat pool of strictly-increasing rows
+    plus per-predecessor (starts, lens) — the layout the self-feeding
+    kernel prefetches.  Nothing here (or anywhere) materializes the old
+    [P, B, L] stacked window array."""
     rng = np.random.default_rng(seed)
-    nbrs = np.stack([
-        np.stack([np.sort(rng.choice(10 * L, size=L, replace=False))
-                  for _ in range(B)])
-        for _ in range(P)
-    ]).astype(np.int32)
+    lens = np.full((P, B), L, np.int32)
+    starts = (np.arange(P * B, dtype=np.int32) * L).reshape(P, B)
+    flat = np.concatenate([
+        np.sort(rng.choice(10 * L, size=L, replace=False)).astype(np.int32)
+        for _ in range(P * B)
+    ])
     cand = rng.integers(0, 10 * L, size=(B, D)).astype(np.int32)
     extra = rng.integers(0, 10 * L, size=(B, E)).astype(np.int32)
     dirs = tuple(1 if e % 2 == 0 else 0 for e in range(E))
-    return jnp.asarray(cand), jnp.asarray(nbrs), jnp.asarray(extra), dirs
+    return (jnp.asarray(cand), jnp.asarray(flat), jnp.asarray(starts),
+            jnp.asarray(lens), jnp.asarray(extra), dirs)
+
+
+def _hbm_mb(*arrays) -> float:
+    return sum(a.size * a.dtype.itemsize for a in arrays) / 2**20
 
 
 def run_level(full: bool = False) -> list[Row]:
-    """Fused level expansion vs the old per-predecessor composition.
+    """Self-feeding fused level expansion vs the per-predecessor
+    composition, with the operand-HBM-peak accounting for DESIGN.md §4.
 
-    The old executor hot path issued one `sorted_membership` pallas_call
-    per predecessor plus one XLA mask pass per restriction / injectivity
-    constraint — P + E separate sweeps over the [B, D] candidate matrix.
-    The fused kernel does the whole level in ONE pass (`passes` in the
-    emitted rows records exactly that)."""
+    per-pred      one `sorted_membership` pallas_call per predecessor
+                  (window gathered host-side, ONE [B, L] array live at a
+                  time) plus one XLA mask pass per restriction /
+                  injectivity constraint — P + E separate sweeps.
+    fused-gather  the whole level in ONE kernel pass; the predecessor
+                  windows are DMA'd from the flat CSR array inside the
+                  grid, so the only operands resident in HBM are the
+                  graph itself + the candidate matrix.
+    stacked (retired, PR 1..2): fused but fed a host-stacked [P, B, L]
+                  window array — its ~P× operand peak is reported as
+                  `hbm_peak_mb_stacked` for the before/after table; the
+                  path itself no longer exists in the code base.
+    """
     rows: list[Row] = []
     for (B, D, P, L) in (LEVEL_SHAPES_FULL if full else LEVEL_SHAPES_QUICK):
-        cand, nbrs, extra, dirs = _level_data(B, D, P, L)
+        cand, flat, starts, lens, extra, dirs = _level_data(B, D, P, L)
         E = len(dirs)
 
         @jax.jit
-        def per_pred(cand, nbrs, extra):
-            # the pre-fusion executor path: one membership kernel pass
-            # per predecessor, then one XLA mask per comparison
+        def per_pred(cand, flat, starts, lens, extra):
+            # the pre-fusion executor path: gather one predecessor's
+            # window host-side, one membership kernel pass per
+            # predecessor, then one XLA mask per comparison
             mask = jnp.ones(cand.shape, dtype=bool)
             for p in range(P):
-                mask &= ops.sorted_membership(cand, nbrs[p])
+                window = flat[starts[p][:, None]
+                              + jnp.arange(L, dtype=jnp.int32)[None, :]]
+                mask &= ops.sorted_membership(cand, window,
+                                              nbr_len=lens[p])
             for e, d in enumerate(dirs):
                 ev = extra[:, e][:, None]
                 mask &= (cand > ev) if d > 0 else (cand != ev)
             return mask
 
-        fused = lambda: ops.level_expand(cand, nbrs, extra, dirs=dirs)
-        out_old = per_pred(cand, nbrs, extra)
+        fused = lambda: ops.level_expand(cand, flat, starts, lens, extra,
+                                         dirs=dirs, window=L)
+        out_old = per_pred(cand, flat, starts, lens, extra)
         out_new = fused()
         assert bool(jnp.all(out_old == out_new)), (B, D, P, L)
-        cnt = ops.level_expand(cand, nbrs, extra, dirs=dirs, count=True)
+        cnt = ops.level_expand(cand, flat, starts, lens, extra,
+                               dirs=dirs, window=L, count=True)
         assert bool(jnp.all(cnt == out_old.sum(axis=1))), (B, D, P, L)
 
-        t_old = _time(lambda: per_pred(cand, nbrs, extra))
+        t_old = _time(lambda: per_pred(cand, flat, starts, lens, extra))
         t_new = _time(fused)
-        t_cnt = _time(lambda: ops.level_expand(cand, nbrs, extra,
-                                               dirs=dirs, count=True))
+        t_cnt = _time(lambda: ops.level_expand(cand, flat, starts, lens,
+                                               extra, dirs=dirs, window=L,
+                                               count=True))
         compares = B * D * L * P
+        # operand HBM peaks (MB): what must be live at once to feed the
+        # kernel, beyond the resident CSR itself
+        peak_gather = _hbm_mb(cand, starts, lens, extra)
+        peak_perpred = _hbm_mb(cand, extra) + B * L * 4 / 2**20
+        peak_stacked = _hbm_mb(cand, extra) + P * B * L * 4 / 2**20
         keys = {"B": B, "D": D, "P": P, "L": L}
         rows.append(Row("level_expand", {**keys, "impl": "per-pred"},
                         t_old, "s", {"passes": P + E,
+                                     "hbm_peak_mb": peak_perpred,
                                      "gcmp_per_s": compares / t_old / 1e9}))
-        rows.append(Row("level_expand", {**keys, "impl": "fused"},
+        rows.append(Row("level_expand", {**keys, "impl": "fused-gather"},
                         t_new, "s", {"passes": 1,
+                                     "hbm_peak_mb": peak_gather,
+                                     "hbm_peak_mb_stacked": peak_stacked,
                                      "gcmp_per_s": compares / t_new / 1e9}))
-        rows.append(Row("level_expand", {**keys, "impl": "fused-count"},
+        rows.append(Row("level_expand", {**keys,
+                                         "impl": "fused-gather-count"},
                         t_cnt, "s", {"passes": 1,
+                                     "hbm_peak_mb": peak_gather,
                                      "gcmp_per_s": compares / t_cnt / 1e9}))
     return rows
 

@@ -32,6 +32,7 @@ BENCHES = {
     "tab2": tab2_restrictions.main,  # restriction-set selection speedup
     "fig9": fig9_schedules.main,     # schedule landscape + 2-phase filter
     "fig10": fig10_iep.main,         # IEP on/off
+    "fig10_fused": fig10_iep.main_fused,  # IEP tail: separate vs fused
     "fig11": fig11_model_accuracy.main,  # model pick vs oracle
     "fig12": fig12_scaling.main,     # scaling / load balance
     "tab3": tab3_overhead.main,      # preprocessing overhead

@@ -14,3 +14,4 @@ else
   python -m pytest -x -q "$@"
 fi
 scripts/query_smoke.sh
+scripts/docs_check.sh

@@ -193,16 +193,17 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
         if use_pallas and len(preds) > 1:
             from ..kernels.ops import level_expand
 
+            # the kernel gathers each predecessor's neighbor window from
+            # the flat CSR array itself (scalar-prefetched offsets +
+            # in-grid DMA) — nothing here materializes a [P, B, W] stack
             us = emb[:, jnp.asarray(preds)].T                      # [P, B]
-            starts = indptr[us]
-            nbrs = flat[starts[:, :, None]
-                        + jnp.arange(W, dtype=starts.dtype)[None, None, :]]
             res = level_expand(
-                cand, nbrs,
+                cand, flat, indptr[us], degrees[us],
                 emb[:, jnp.asarray([c for c, _ in extras])] if extras
                 else None,
-                mask, degrees[us],
+                mask,
                 dirs=tuple(d for _, d in extras), count=want_counts,
+                window=W, flat_padded=True,
             )
             return res if want_counts else (cand, res)
         if len(preds) > 1:
@@ -304,9 +305,34 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
         needed = jnp.maximum(needed, offset)
         return new_emb, new_valid, needed
 
+    def iep_card_fused(sub_emb, sub_base, sub_valid, U,
+                       indptr, degrees, flat, width):
+        """One IEP-term cardinality — |window ∩ (∩_q N(v_q))| minus the
+        prefix-vertex corrections — in a SINGLE fused kernel pass: the
+        already-assigned prefix vertices ride along as negatively-
+        weighted candidate columns (`neg_from`), so the kernel's signed
+        popcount returns raw − corr directly (DESIGN.md §4) instead of
+        one binary-search sweep per prefix position."""
+        from ..kernels.ops import level_expand
+
+        cand, ok = gather_window(flat, indptr, degrees, sub_base, width)
+        comb = jnp.concatenate([cand, sub_emb], axis=1)
+        cvalid = jnp.concatenate(
+            [ok & sub_valid[:, None],
+             jnp.broadcast_to(sub_valid[:, None], sub_emb.shape)], axis=1)
+        us = sub_emb[:, jnp.asarray(U)].T                          # [P, B]
+        signed = level_expand(
+            comb, flat, indptr[us], degrees[us], None, cvalid,
+            dirs=(), count=True, neg_from=width,
+            window=W, flat_padded=True,
+        )
+        return signed.astype(jnp.int64)
+
     def iep_value(emb, valid, indptr, degrees, flat):
         """Per-row IEP count over the folded tail (int64), with bucketed
-        union-window gathers through the shared expansion core."""
+        union-window gathers through the shared expansion core.  On the
+        Pallas path each (union, bucket) cardinality — including the
+        prefix corrections — is one fused kernel pass."""
         iep = plan.iep
         cards = []
         needed_extra = jnp.asarray(0, jnp.int32)
@@ -323,24 +349,31 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
                                            scaled_need(sub_total, cap))
                 sub_emb = jnp.take(emb, sel_idx, axis=0, mode="clip")
                 sub_base = jnp.take(base, sel_idx, mode="clip")
-                raw = expand_core(
-                    sub_emb, sub_base, sub_valid, U, (),
-                    indptr, degrees, flat, width, want_counts=True,
-                ).astype(jnp.int64)
-                # subtract already-assigned prefix vertices inside the
-                # intersection (injectivity w.r.t. outer loops)
-                corr = jnp.zeros_like(raw)
-                for j in range(depth):
-                    vj = sub_emb[:, j]
-                    inside = sub_valid
-                    for q in U:
-                        u = sub_emb[:, q]
-                        inside &= _segment_member(
-                            flat, indptr[u], indptr[u] + degrees[u], vj, iters
-                        )
-                    corr += inside.astype(jnp.int64)
+                if use_pallas:
+                    val = iep_card_fused(
+                        sub_emb, sub_base, sub_valid, U,
+                        indptr, degrees, flat, width)
+                else:
+                    raw = expand_core(
+                        sub_emb, sub_base, sub_valid, U, (),
+                        indptr, degrees, flat, width, want_counts=True,
+                    ).astype(jnp.int64)
+                    # subtract already-assigned prefix vertices inside
+                    # the intersection (injectivity w.r.t. outer loops)
+                    corr = jnp.zeros_like(raw)
+                    for j in range(depth):
+                        vj = sub_emb[:, j]
+                        inside = sub_valid
+                        for q in U:
+                            u = sub_emb[:, q]
+                            inside &= _segment_member(
+                                flat, indptr[u], indptr[u] + degrees[u],
+                                vj, iters
+                            )
+                        corr += inside.astype(jnp.int64)
+                    val = raw - corr
                 card = card.at[sel_idx].add(
-                    jnp.where(sub_valid, raw - corr, 0), mode="drop")
+                    jnp.where(sub_valid, val, 0), mode="drop")
             cards.append(card)
         val = jnp.zeros((C,), dtype=jnp.int64)
         for coeff, idxs in iep.terms:
@@ -382,12 +415,24 @@ def device_graph(graph: GraphCSR):
 
     Matchers accept the returned tuple via ``arrays=`` so long-lived
     callers (the query engine) keep ONE resident copy of the CSR shared
-    by every cached matcher instead of re-uploading per pattern."""
+    by every cached matcher instead of re-uploading per pattern.
+
+    The flat indices array is padded ONCE here with never-matching
+    sentinels so the fused kernel's in-grid window DMAs (bounded by the
+    row-extent + DMA-skip invariant — DESIGN.md §4) stay in bounds;
+    every kernel call then passes ``flat_padded=True`` instead of
+    re-padding the resident graph per call."""
+    from ..kernels.ops import flat_gather_pad
+
     degrees = np.concatenate([graph.degrees, np.zeros(1, dtype=np.int32)])
+    flat = np.concatenate([
+        graph.indices,
+        np.full(flat_gather_pad(), np.iinfo(np.int32).max, dtype=np.int32),
+    ])
     return (
         jnp.asarray(graph.indptr),
         jnp.asarray(degrees),
-        jnp.asarray(graph.indices),
+        jnp.asarray(flat),
     )
 
 

@@ -15,14 +15,28 @@ Three kernels:
                          (membership + in-kernel popcount, fused)
   level_expand_kernel    the executor's whole per-level admissibility
                          test in ONE pass: membership against ALL
-                         predecessor neighborhoods (stacked on the
-                         innermost grid dimension), the asymmetric-
+                         predecessor neighborhoods, the asymmetric-
                          restriction comparisons and injectivity !=
                          masks against per-row prefix vertices, reduced
                          to either a mask or an in-kernel popcount.
 
-Padding contract: `cand` padded with -1, `nbr` padded with INT_MAX
-(sorted ascending), so padding never produces a match.
+`level_expand_kernel` is self-feeding (DESIGN.md §4): it never sees a
+materialized `[P, B, W]` stack of predecessor windows.  The CSR row
+offsets and lengths of every predecessor arrive as scalar-prefetch
+operands (`PrefetchScalarGridSpec`, resident in SMEM before the body
+runs) and each neighbor block is DMA'd out of the flat CSR `indices`
+array — which stays unblocked in HBM (`memory_space=ANY`) — into a VMEM
+scratch buffer inside the grid.  Rows whose valid length ends before the
+current block skip their DMA entirely, so power-law short rows cost no
+HBM traffic at all.  The `count=True` path optionally applies a signed
+weight per candidate column (`neg_from`): columns ≥ `neg_from` subtract
+instead of add, which lets the executor fold the IEP prefix-correction
+cardinalities into the same pass (the prefix vertices ride along as
+negatively-weighted candidates).
+
+Padding contract: `cand` padded with -1, neighbor rows masked to
+INT_MAX past their valid length in-kernel (rows sorted ascending), so
+padding never produces a match.
 """
 from __future__ import annotations
 
@@ -79,54 +93,97 @@ def _count_body(cand_ref, nbr_ref, out_ref, acc_ref, *, block_l: int):
         out_ref[...] = acc_ref[...]
 
 
-def _level_expand_body(*refs, n_preds: int, dirs: tuple, count: bool):
-    """Fused per-level admissibility test.
+def _level_expand_body(*refs, n_preds: int, nl: int, dirs: tuple,
+                       count: bool, neg_from: int | None,
+                       block_b: int, block_d: int, block_l: int):
+    """Fused, self-feeding per-level admissibility test.
 
-    Grid = (B/bb, D/bd, P·L/bl): the innermost dimension walks every
-    (predecessor, neighbor-block) pair, so one grid sweep touches the
-    candidate block once per predecessor block instead of re-launching a
-    kernel (and re-streaming the candidate matrix through HBM) per
-    predecessor.  A VMEM hit-accumulator counts, for each candidate, in
-    how many predecessor neighborhoods it was found (nbr rows must be
-    STRICTLY increasing on their valid prefix — as CSR neighborhoods
-    are — so each row matches a candidate at most once, even across
-    l-blocks); admissibility is hits == P, ANDed
+    Grid = (B/bb, D/bd, P·nl): the innermost dimension walks every
+    (predecessor, neighbor-block) pair.  Each step DMAs its own neighbor
+    block out of the flat CSR array in HBM — one `block_l`-wide slice per
+    frontier row, at `starts[p, row] + li·block_l` — into VMEM scratch.
+    Rows whose valid length (`lens[p, row]`) ends before this block skip
+    the DMA; their stale buffer contents are masked to NBR_PAD before the
+    compare, so they can never match.
+
+    A VMEM hit-accumulator counts, for each candidate, in how many
+    predecessor neighborhoods it was found (CSR rows are STRICTLY
+    increasing on their valid prefix, so each row matches a candidate at
+    most once, even across l-blocks); admissibility is hits == P, ANDed
     with the restriction (>/<) and injectivity (!=) comparisons against
     the per-row prefix-vertex values in `extra` — all applied at the
-    final block, so the whole level is a single pass over HBM.
+    final block, so the whole level is a single pass.
 
-    refs layout: cand, nbr, [extra,] out, hits, [acc]
-      cand  [bb, bd]    candidate block (CAND_PAD-masked)
-      nbr   [1, bb, bl] one predecessor's neighbor block (NBR_PAD-masked)
-      extra [bb, E]     prefix-vertex values, E == len(dirs) (if E > 0)
-      out   [bb, bd] bool mask  — or [bb, 1] int32 row counts if `count`
-      hits  [bb, bd] int32 VMEM scratch
-      acc   [bb, 1]  int32 VMEM scratch (count mode only)
+    refs layout:
+      starts [P, B] int32 SMEM (scalar prefetch) — CSR row offsets
+      lens_s [P, B] int32 SMEM (scalar prefetch) — row lengths (DMA skip)
+      cand   [bb, bd]    candidate block (CAND_PAD-masked)
+      flat   [F]         whole CSR indices array, unblocked (HBM/ANY)
+      lens   [1, bb]     row lengths again, blocked (vector tail mask)
+      extra  [bb, E]     prefix-vertex values, E == len(dirs) (if E > 0)
+      out    [bb, bd] bool mask — or [bb, 1] int32 row counts if `count`
+      nbr    [bb, bl] int32 VMEM scratch (DMA landing buffer)
+      hits   [bb, bd] int32 VMEM scratch
+      acc    [bb, 1]  int32 VMEM scratch (count mode only)
+      sems   [bb] DMA semaphores (one per frontier row)
     """
     if dirs:
-        cand_ref, nbr_ref, extra_ref, out_ref, *scratch = refs
+        (starts_sref, lens_sref, cand_ref, flat_ref, lens_ref, extra_ref,
+         out_ref, *scratch) = refs
     else:
-        cand_ref, nbr_ref, out_ref, *scratch = refs
+        (starts_sref, lens_sref, cand_ref, flat_ref, lens_ref,
+         out_ref, *scratch) = refs
         extra_ref = None
-    hits_ref = scratch[0]
+    nbr_ref, hits_ref = scratch[0], scratch[1]
+    sems_ref = scratch[-1]
+    i = pl.program_id(0)
     j = pl.program_id(1)
     k = pl.program_id(2)
     nj = pl.num_programs(1)
     nk = pl.num_programs(2)
+    p = k // nl
+    li = k % nl
 
     @pl.when(k == 0)
     def _init_hits():
         hits_ref[...] = jnp.zeros_like(hits_ref)
 
     if count:
-        acc_ref = scratch[1]
+        acc_ref = scratch[2]
 
         @pl.when((j == 0) & (k == 0))
         def _init_acc():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # gather this predecessor's neighbor block: one DMA per frontier row
+    # (each row starts at its own CSR offset), skipped when the row's
+    # valid prefix ends before this l-block
+    dmas = []
+    for r in range(block_b):
+        row = i * block_b + r
+        live = lens_sref[p, row] > li * block_l
+        dma = pltpu.make_async_copy(
+            flat_ref.at[pl.ds(starts_sref[p, row] + li * block_l, block_l)],
+            nbr_ref.at[r],
+            sems_ref.at[r],
+        )
+
+        @pl.when(live)
+        def _start(dma=dma):
+            dma.start()
+
+        dmas.append((live, dma))
+    for live, dma in dmas:
+        @pl.when(live)
+        def _wait(dma=dma):
+            dma.wait()
+
+    # mask the ragged tail (and any skipped row's stale buffer) to the
+    # never-matching sentinel
+    pos = li * block_l + jax.lax.broadcasted_iota(
+        jnp.int32, (block_b, block_l), 1)
+    nbr = jnp.where(pos < lens_ref[0][:, None], nbr_ref[...], NBR_PAD)
     cand = cand_ref[...]                  # [bb, bd]
-    nbr = nbr_ref[0]                      # [bb, bl]
     hit = (cand[:, :, None] == nbr[:, None, :]).any(axis=-1)
     hits_ref[...] += hit.astype(jnp.int32)
 
@@ -142,7 +199,16 @@ def _level_expand_body(*refs, n_preds: int, dirs: tuple, count: bool):
             else:
                 mask &= cand != ev
         if count:
-            acc_ref[...] += mask.sum(axis=1, keepdims=True).astype(jnp.int32)
+            if neg_from is not None:
+                # signed popcount: columns ≥ neg_from are the IEP
+                # prefix-correction candidates and subtract instead of add
+                col = j * block_d + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_b, block_d), 1)
+                w = jnp.where(col < neg_from, 1, -1).astype(jnp.int32)
+            else:
+                w = jnp.int32(1)
+            acc_ref[...] += (mask.astype(jnp.int32) * w).sum(
+                axis=1, keepdims=True).astype(jnp.int32)
 
             @pl.when(j == nj - 1)
             def _flush():
@@ -153,61 +219,88 @@ def _level_expand_body(*refs, n_preds: int, dirs: tuple, count: bool):
 
 def level_expand_pallas(
     cand: jax.Array,                      # [B, D] int32, CAND_PAD-masked
-    nbrs: jax.Array,                      # [P, B, L] int32, NBR_PAD-masked
+    flat: jax.Array,                      # [F] int32 flat CSR indices
+    starts: jax.Array,                    # [P, B] int32 CSR row offsets
+    lens: jax.Array,                      # [P, B] int32 row lengths
     extra: jax.Array | None = None,       # [B, E] int32 (E == len(dirs))
     *,
     dirs: tuple = (),
     count: bool = False,
+    neg_from: int | None = None,
+    window: int,
     block_b: int = 8,
     block_d: int = 128,
     block_l: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One fused pass per expansion level (shapes pre-padded to block
-    multiples — ops.level_expand handles that).
+    """One fused, self-feeding pass per expansion level (cand pre-padded
+    to block multiples — ops.level_expand handles that).
 
-    mask[b, d] = (∀p: cand[b, d] ∈ nbrs[p, b, :]) ∧ extras(b, d), where
-    extras applies dirs[e] ∈ {+1: cand > extra[b, e], -1: cand <,
-    0: cand !=}.  `count=True` instead returns cnt[b] = Σ_d mask[b, d]
-    via the in-kernel popcount accumulator (intersect_count pattern).
+    mask[b, d] = (∀p: cand[b, d] ∈ flat[starts[p,b] : +lens[p,b]])
+               ∧ extras(b, d), where extras applies dirs[e] ∈
+    {+1: cand > extra[b, e], -1: cand <, 0: cand !=}.  `count=True`
+    instead returns cnt[b] = Σ_d mask[b, d] via the in-kernel popcount
+    accumulator; with `neg_from` set, columns ≥ neg_from are weighted −1
+    (the fused IEP prefix-correction tail — DESIGN.md §4).
+
+    `window` (static) bounds every row length and sets how many
+    `block_l`-blocks the grid walks per predecessor.  DMA safety
+    contract: every row lies inside the unpadded flat array
+    (starts[p, b] + lens[p, b] ≤ F, as real CSR rows do) and flat
+    carries ≥ block_l − 1 trailing sentinels — the DMA skip only reads
+    l-blocks below a row's length, so reads end before
+    F + block_l (ops.flat_gather_pad / device_graph provide the pad).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, D = cand.shape
-    P, Bn, L = nbrs.shape
-    assert B == Bn and P >= 1, (cand.shape, nbrs.shape)
-    assert B % block_b == 0 and D % block_d == 0 and L % block_l == 0
-    nl = L // block_l
+    P, Bs = starts.shape
+    assert B == Bs and P >= 1, (cand.shape, starts.shape)
+    assert lens.shape == (P, B), (lens.shape, starts.shape)
+    assert B % block_b == 0 and D % block_d == 0
+    nl = max(-(-window // block_l), 1)
     grid = (B // block_b, D // block_d, P * nl)
     in_specs = [
-        pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j)),
-        pl.BlockSpec((1, block_b, block_l),
-                     lambda i, j, k: (k // nl, i, k % nl)),
+        pl.BlockSpec((block_b, block_d), lambda i, j, k, ss, ls: (i, j)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((1, block_b), lambda i, j, k, ss, ls: (k // nl, i)),
     ]
-    operands = [cand, nbrs]
+    operands = [cand, flat, lens]
     if dirs:
         assert extra is not None and extra.shape == (B, len(dirs))
         in_specs.append(
-            pl.BlockSpec((block_b, len(dirs)), lambda i, j, k: (i, 0)))
+            pl.BlockSpec((block_b, len(dirs)),
+                         lambda i, j, k, ss, ls: (i, 0)))
         operands.append(extra)
-    scratch = [pltpu.VMEM((block_b, block_d), jnp.int32)]
+    scratch = [
+        pltpu.VMEM((block_b, block_l), jnp.int32),
+        pltpu.VMEM((block_b, block_d), jnp.int32),
+    ]
     if count:
-        out_specs = pl.BlockSpec((block_b, 1), lambda i, j, k: (i, 0))
+        out_specs = pl.BlockSpec((block_b, 1), lambda i, j, k, ss, ls: (i, 0))
         out_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
         scratch.append(pltpu.VMEM((block_b, 1), jnp.int32))
     else:
-        out_specs = pl.BlockSpec((block_b, block_d), lambda i, j, k: (i, j))
+        out_specs = pl.BlockSpec((block_b, block_d),
+                                 lambda i, j, k, ss, ls: (i, j))
         out_shape = jax.ShapeDtypeStruct((B, D), jnp.bool_)
-    out = pl.pallas_call(
-        functools.partial(_level_expand_body, n_preds=P, dirs=tuple(dirs),
-                          count=count),
+    scratch.append(pltpu.SemaphoreType.DMA((block_b,)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=out_shape,
         scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _level_expand_body, n_preds=P, nl=nl, dirs=tuple(dirs),
+            count=count, neg_from=neg_from,
+            block_b=block_b, block_d=block_d, block_l=block_l),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(*operands)
+    )(starts, lens, *operands)
     return out[:, 0] if count else out
 
 

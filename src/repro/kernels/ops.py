@@ -15,6 +15,25 @@ from .intersect import (
     membership_pallas,
 )
 
+# Largest block_l the level-expansion kernel accepts.  device_graph pads
+# the device CSR by flat_gather_pad() sentinels so every in-kernel
+# window DMA stays in bounds for any block_l up to this.
+MAX_BLOCK_L = 512
+
+
+def flat_gather_pad() -> int:
+    """Sentinel entries to append to a flat CSR array so the kernel's
+    in-grid window DMAs never read out of bounds.
+
+    Safety invariant (what actually bounds the reads): every row must
+    lie inside the UNPADDED array — starts[p, b] + lens[p, b] ≤ F — as
+    real CSR rows do.  The kernel only DMAs l-blocks with
+    li·block_l < lens[p, b], so the furthest read ends at
+    starts + round_up(lens, block_l) ≤ F + block_l − 1.  A constant
+    MAX_BLOCK_L pad therefore suffices for any row length / `window`,
+    for any block_l ≤ MAX_BLOCK_L (asserted in level_expand)."""
+    return MAX_BLOCK_L
+
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int, value) -> jax.Array:
     b = (-x.shape[0]) % mult0
@@ -91,57 +110,81 @@ def intersect_count(
     return out[:B]
 
 
-@partial(jax.jit, static_argnames=("dirs", "count", "block_b", "block_d",
+@partial(jax.jit, static_argnames=("dirs", "count", "neg_from", "window",
+                                   "flat_padded", "block_b", "block_d",
                                    "block_l", "interpret"))
 def level_expand(
     cand: jax.Array,                      # [B, D] candidate window
-    nbrs: jax.Array,                      # [P, B, L] predecessor windows
+    flat: jax.Array,                      # [F] flat CSR indices array
+    starts: jax.Array,                    # [P, B] CSR row offsets
+    lens: jax.Array,                      # [P, B] valid row lengths
     extra: jax.Array | None = None,       # [B, E] prefix-vertex values
     cand_valid: jax.Array | None = None,  # [B, D] bool
-    nbr_lens: jax.Array | None = None,    # [P, B] valid prefix lengths
     *,
     dirs: tuple = (),
     count: bool = False,
+    neg_from: int | None = None,
+    window: int,
+    flat_padded: bool = False,
     block_b: int = 8,
     block_d: int = 128,
     block_l: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One fused Pallas pass for a whole expansion level.
+    """One fused, self-feeding Pallas pass for a whole expansion level.
 
     mask[b, d] = cand_valid[b, d]
-               ∧ (∀p: cand[b, d] ∈ nbrs[p, b, :nbr_lens[p, b]])
+               ∧ (∀p: cand[b, d] ∈ flat[starts[p, b] : +lens[p, b]])
                ∧ (∀e: cand[b, d] <op dirs[e]> extra[b, e])
     with <op> ∈ {+1: >, -1: <, 0: !=}.
-    `count=True` returns cnt[b] = Σ_d mask[b, d] (int32) instead.
+    `count=True` returns cnt[b] = Σ_d mask[b, d] (int32) instead; with
+    `neg_from` set, columns ≥ neg_from subtract instead of add (the
+    fused IEP prefix-correction tail — DESIGN.md §4).
 
-    Contract: nbr rows STRICTLY increasing on their valid prefix (CSR
-    neighborhoods are) — the kernel's per-candidate hit accumulator
-    relies on at most one match per predecessor row, so a duplicated
-    neighbor value would double-count.
+    The predecessor neighborhoods are gathered INSIDE the kernel from
+    `flat` (scalar-prefetched `starts`, per-row DMA) — no caller ever
+    materializes a stacked [P, B, W] window array.
+
+    Contracts:
+      * rows flat[starts[p,b] : +lens[p,b]] STRICTLY increasing (CSR
+        neighborhoods are) — the per-candidate hit accumulator relies on
+        at most one match per predecessor row;
+      * `window` (static) ≥ every lens[p, b] — blocks past it are never
+        walked;
+      * every row lies inside the unpadded array:
+        starts[p, b] + lens[p, b] ≤ len(flat) (CSR rows do) — with the
+        DMA skip this bounds reads to len(flat) + block_l − 1, so
+        flat_gather_pad() sentinels make them safe;
+      * flat_padded=True asserts the caller already appended those
+        sentinels (device_graph does); with False the wrapper pads here
+        (fine for tests, avoid per-call padding of a resident graph on
+        the hot path).
     """
     B, D = cand.shape
-    P, _, L = nbrs.shape
+    P, _ = starts.shape
     cand = cand.astype(jnp.int32)
-    nbrs = nbrs.astype(jnp.int32)
     if cand_valid is not None:
         cand = jnp.where(cand_valid, cand, CAND_PAD)
-    if nbr_lens is not None:
-        pos = jnp.arange(L, dtype=jnp.int32)[None, None, :]
-        nbrs = jnp.where(pos < nbr_lens[:, :, None], nbrs, NBR_PAD)
     cand_p = _pad_to(cand, block_b, block_d, CAND_PAD)
+    starts = starts.astype(jnp.int32)
+    lens = lens.astype(jnp.int32)
     pb = (-B) % block_b
-    pL = (-L) % block_l
-    if pb or pL:
-        nbrs = jnp.pad(nbrs, ((0, 0), (0, pb), (0, pL)),
-                       constant_values=NBR_PAD)
+    if pb:
+        # padded rows: offset 0 / length 0 — the kernel skips their DMAs
+        starts = jnp.pad(starts, ((0, 0), (0, pb)))
+        lens = jnp.pad(lens, ((0, 0), (0, pb)))
+    flat = flat.astype(jnp.int32)
+    assert block_l <= MAX_BLOCK_L, (block_l, MAX_BLOCK_L)
+    if not flat_padded:
+        flat = jnp.concatenate(
+            [flat, jnp.full(flat_gather_pad(), NBR_PAD, jnp.int32)])
     if dirs:
         extra = extra.astype(jnp.int32)
         if pb:
             extra = jnp.pad(extra, ((0, pb), (0, 0)))
     out = level_expand_pallas(
-        cand_p, nbrs, extra if dirs else None,
-        dirs=tuple(dirs), count=count,
+        cand_p, flat, starts, lens, extra if dirs else None,
+        dirs=tuple(dirs), count=count, neg_from=neg_from, window=window,
         block_b=block_b, block_d=block_d, block_l=block_l,
         interpret=interpret,
     )

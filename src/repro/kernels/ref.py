@@ -27,26 +27,33 @@ def intersect_count_ref(cand: jax.Array, nbr: jax.Array) -> jax.Array:
 
 def level_expand_ref(
     cand: jax.Array,                      # [B, D]
-    nbrs: jax.Array,                      # [P, B, L]
+    flat: jax.Array,                      # [F] flat CSR indices
+    starts: jax.Array,                    # [P, B] row offsets
+    lens: jax.Array,                      # [P, B] valid row lengths
     extra: jax.Array | None = None,       # [B, E]
     cand_valid: jax.Array | None = None,  # [B, D] bool
-    nbr_lens: jax.Array | None = None,    # [P, B]
     *,
     dirs: tuple = (),
     count: bool = False,
+    neg_from: int | None = None,
+    window: int,
 ) -> jax.Array:
-    """Oracle for the fused level-expansion kernel (ops.level_expand):
-    membership against every predecessor window, then the restriction /
-    injectivity comparisons, as plain separate jnp passes.  Same
-    contract: nbr rows strictly increasing on the valid prefix."""
+    """Oracle for the fused level-expansion kernel (ops.level_expand),
+    covering the in-kernel gather AND the signed IEP-correction count:
+    each predecessor window is gathered host-side from `flat` at
+    `starts[p]` (positions ≥ lens[p] masked out), membership and the
+    restriction / injectivity comparisons run as plain separate jnp
+    passes.  `count=True` sums the mask per row; with `neg_from` set,
+    columns ≥ neg_from are weighted −1 (the IEP prefix corrections).
+    Same contract: rows strictly increasing on the valid prefix,
+    window ≥ every lens[p, b]."""
     mask = jnp.ones(cand.shape, dtype=bool)
     if cand_valid is not None:
         mask &= cand_valid
-    for p in range(nbrs.shape[0]):
-        nb = nbrs[p]
-        if nbr_lens is not None:
-            pos = jnp.arange(nb.shape[1])[None, :]
-            nb = jnp.where(pos < nbr_lens[p][:, None], nb, -(2**31))
+    pos = jnp.arange(window, dtype=jnp.int32)[None, :]
+    for p in range(starts.shape[0]):
+        idx = jnp.minimum(starts[p][:, None] + pos, flat.shape[0] - 1)
+        nb = jnp.where(pos < lens[p][:, None], flat[idx], -(2**31))
         mask &= membership_ref(cand, nb)
     for e, d in enumerate(dirs):
         ev = extra[:, e][:, None]
@@ -56,7 +63,12 @@ def level_expand_ref(
             mask &= cand < ev
         else:
             mask &= cand != ev
-    return mask.sum(axis=1).astype(jnp.int32) if count else mask
+    if not count:
+        return mask
+    if neg_from is not None:
+        w = jnp.where(jnp.arange(cand.shape[1]) < neg_from, 1, -1)
+        return (mask.astype(jnp.int32) * w[None, :]).sum(axis=1)
+    return mask.sum(axis=1).astype(jnp.int32)
 
 
 # ------------------------------------------------------------ attention ---

@@ -1,16 +1,23 @@
 """Fused Pallas level-expansion kernel: parity at every layer.
 
-1. Kernel vs the pure-jnp oracle (kernels/ref.py) on random windows,
-   mask and count modes, including ragged shapes and all three
-   comparison kinds (restriction >, restriction <, injectivity !=).
+1. Kernel vs the pure-jnp oracle (kernels/ref.py) on random CSR-layout
+   windows — the kernel gathers every predecessor neighborhood from the
+   flat array INSIDE the grid (scalar-prefetched offsets + per-row DMA),
+   so these tests feed (flat, starts, lens), never a stacked [P, B, W]
+   array.  Mask and count modes, ragged/empty rows, all three comparison
+   kinds (restriction >, restriction <, injectivity !=), and the signed
+   count (`neg_from`) that carries the IEP prefix corrections.
 2. Executor counts with the fused kernel (use_pallas=True — interpret
    lowering on CPU) vs the portable binary-search path vs the brute
-   oracle, for every oracle pattern, enum and IEP modes, with and
-   without degree buckets.  Counts must be bit-identical.
+   oracle, for every oracle pattern and the paper's P1-P6, enum and IEP
+   modes, with and without degree buckets, including capacity-overflow
+   escalation and graphs with empty neighborhoods.  Counts must be
+   bit-identical.
 """
 import numpy as np
 import pytest
 
+from repro.configs.graphpi import get_pattern
 from repro.core.executor import ExecutorConfig, count_embeddings
 from repro.core.oracle import count_embeddings_oracle
 from repro.core.pattern import clique, cycle, house, rectangle, star, triangle
@@ -30,44 +37,85 @@ PATTERNS = [pytest.param(p, id=p.name,
 
 
 # ------------------------------------------------------------- kernel ----
-def _windows(seed, B=24, D=37, P=3, L=50, vmax=200):
+def _csr_windows(seed, B=24, D=37, P=3, L=50, vmax=200, empty_frac=0.1):
+    """Random CSR-layout test data: a flat pool of strictly-increasing
+    rows (one per (p, b), lengths 0..L — including empty neighborhoods)
+    plus the (starts, lens) offset arrays the kernel prefetches."""
     rng = np.random.default_rng(seed)
-    nbrs = np.stack([
-        np.stack([np.sort(rng.choice(vmax, size=L, replace=False))
-                  for _ in range(B)])
-        for _ in range(P)
-    ]).astype(np.int32)
+    lens = rng.integers(0, L + 1, size=(P, B)).astype(np.int32)
+    lens[rng.random((P, B)) < empty_frac] = 0
+    rows = []
+    starts = np.zeros((P, B), np.int32)
+    off = 0
+    for p in range(P):
+        for b in range(B):
+            starts[p, b] = off
+            row = np.sort(rng.choice(vmax, size=lens[p, b], replace=False))
+            rows.append(row.astype(np.int32))
+            off += lens[p, b]
+    flat = np.concatenate(rows) if rows else np.zeros(0, np.int32)
     cand = rng.integers(0, vmax, size=(B, D)).astype(np.int32)
     cand_valid = rng.random((B, D)) < 0.8
-    nbr_lens = rng.integers(0, L + 1, size=(P, B)).astype(np.int32)
     extra = rng.integers(0, vmax, size=(B, 3)).astype(np.int32)
-    return cand, nbrs, extra, cand_valid, nbr_lens
+    return cand, flat, starts, lens, extra, cand_valid
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 @pytest.mark.parametrize("count", [False, True], ids=["mask", "count"])
 def test_level_expand_matches_ref(seed, count):
-    args = _windows(seed)
+    cand, flat, starts, lens, extra, valid = _csr_windows(seed)
     dirs = (1, -1, 0)
-    got = ops.level_expand(*args, dirs=dirs, count=count)
-    want = ref.level_expand_ref(*args, dirs=dirs, count=count)
+    got = ops.level_expand(cand, flat, starts, lens, extra, valid,
+                           dirs=dirs, count=count, window=50)
+    want = ref.level_expand_ref(cand, flat, starts, lens, extra, valid,
+                                dirs=dirs, count=count, window=50)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("neg_from", [0, 20, 37])
+def test_level_expand_signed_count_matches_ref(seed, neg_from):
+    """The fused IEP tail: columns ≥ neg_from subtract (the prefix
+    corrections ride along as negatively-weighted candidates)."""
+    cand, flat, starts, lens, _, valid = _csr_windows(seed)
+    got = ops.level_expand(cand, flat, starts, lens, None, valid,
+                           count=True, neg_from=neg_from, window=50)
+    want = ref.level_expand_ref(cand, flat, starts, lens, None, valid,
+                                count=True, neg_from=neg_from, window=50)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_level_expand_no_extras_single_pred():
-    cand, nbrs, _, valid, lens = _windows(3, P=1)
-    got = ops.level_expand(cand, nbrs, None, valid, lens)
-    want = ref.level_expand_ref(cand, nbrs, None, valid, lens)
+    cand, flat, starts, lens, _, valid = _csr_windows(3, P=1)
+    got = ops.level_expand(cand, flat, starts, lens, None, valid, window=50)
+    want = ref.level_expand_ref(cand, flat, starts, lens, None, valid,
+                                window=50)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_level_expand_all_rows_empty():
+    """Empty neighborhoods: no DMA is issued at all, nothing matches."""
+    cand, flat, starts, lens, _, valid = _csr_windows(5, P=2)
+    lens[:] = 0
+    got = ops.level_expand(cand, flat, starts, lens, None, valid,
+                           count=True, window=50)
+    assert not np.asarray(got).any()
+    got_m = ops.level_expand(cand, flat, starts, lens, None, valid,
+                             window=50)
+    assert not np.asarray(got_m).any()
+
+
 def test_level_expand_block_shape_invariance():
-    """Block layout must not change results (grid/accumulator logic)."""
-    args = _windows(4, B=16, D=40, P=2, L=70)
+    """Block layout must not change results (grid/accumulator/DMA-skip
+    logic) — including block_l larger than most row lengths."""
+    cand, flat, starts, lens, extra, valid = _csr_windows(
+        4, B=16, D=40, P=2, L=70)
     dirs = (1, 0, 0)
-    base = np.asarray(ref.level_expand_ref(*args, dirs=dirs))
+    base = np.asarray(ref.level_expand_ref(
+        cand, flat, starts, lens, extra, valid, dirs=dirs, window=70))
     for bb, bd, bl in [(8, 128, 128), (4, 64, 32), (16, 256, 256)]:
-        got = ops.level_expand(*args, dirs=dirs,
+        got = ops.level_expand(cand, flat, starts, lens, extra, valid,
+                               dirs=dirs, window=70,
                                block_b=bb, block_d=bd, block_l=bl)
         np.testing.assert_array_equal(np.asarray(got), base)
 
@@ -109,6 +157,66 @@ def test_fused_matches_portable_and_oracle(er, pattern, iep):
     assert fused.overflowed == portable.overflowed
 
 
+# P3/P5/P6 are the big interpret-mode patterns → slow tier (tier1 --all)
+@pytest.mark.parametrize("pname", [
+    pytest.param(p, marks=pytest.mark.slow if p in ("P3", "P5", "P6")
+                 else [])
+    for p in ("P1", "P2", "P3", "P4", "P5", "P6")])
+def test_fused_iep_tail_matches_portable_P1_P6(er, pname):
+    """The satellite parity matrix: kernel-fused IEP cardinalities vs
+    the portable (separate binary-search sweep) path on the paper's
+    P1-P6, bit-identical counts.  Patterns without a sound foldable
+    tail fall back to enum — still exercised for parity."""
+    pattern = get_pattern(pname)
+    plan = _plan(pattern, iep=True) or _plan(pattern, iep=False)
+    want = count_embeddings_oracle(er.n, er.edge_array(), pattern)
+    portable = count_embeddings(
+        er, plan, ExecutorConfig(capacity=1 << 10, use_pallas=False))
+    fused = count_embeddings(
+        er, plan, ExecutorConfig(capacity=1 << 10, use_pallas=True))
+    assert portable.count == want
+    assert fused.count == want
+    assert fused.overflowed == portable.overflowed
+    assert fused.max_needed == portable.max_needed
+
+
+def test_fused_iep_overflow_escalation_parity(er):
+    """Truncation/overflow edge: a capacity too small for the frontier
+    forces the bisection + escalation driver; the fused-IEP path must
+    report the same exact count and overflow state as the portable
+    path (counts stay exact through escalation)."""
+    pattern = star(4)
+    plan = _plan(pattern, iep=True)
+    assert plan is not None
+    portable = count_embeddings(
+        er, plan, ExecutorConfig(capacity=128, use_pallas=False))
+    fused = count_embeddings(
+        er, plan, ExecutorConfig(capacity=128, use_pallas=True))
+    want = count_embeddings_oracle(er.n, er.edge_array(), pattern)
+    assert portable.count == fused.count == want
+    assert portable.overflowed == fused.overflowed
+    assert portable.max_needed == fused.max_needed
+
+
+def test_fused_iep_empty_neighborhoods():
+    """Graphs with isolated vertices: zero-length predecessor rows must
+    contribute nothing (their window DMAs are skipped entirely)."""
+    rng = np.random.default_rng(11)
+    edges = rng.integers(0, 30, size=(60, 2))     # vertices 30..39 isolated
+    from repro.graph.csr import GraphCSR
+
+    g = GraphCSR.from_edges(40, edges, name="isolated")
+    assert (g.degrees == 0).any()
+    pattern = star(4)
+    plan = _plan(pattern, iep=True)
+    want = count_embeddings_oracle(g.n, g.edge_array(), pattern)
+    portable = count_embeddings(
+        g, plan, ExecutorConfig(capacity=1 << 10, use_pallas=False))
+    fused = count_embeddings(
+        g, plan, ExecutorConfig(capacity=1 << 10, use_pallas=True))
+    assert portable.count == fused.count == want
+
+
 @pytest.mark.parametrize("pattern", [
     pytest.param(house(), id="house", marks=pytest.mark.slow),
     pytest.param(clique(4), id="clique4"),
@@ -121,3 +229,20 @@ def test_fused_bucketed_matches_oracle(pl_graph, pattern):
         ExecutorConfig(capacity=1 << 10, use_pallas=True,
                        degree_buckets=((8, 1.0), (10**9, 0.5))))
     assert got.count == want
+
+
+@pytest.mark.slow
+def test_fused_iep_bucketed_matches_portable(pl_graph):
+    """Degree-bucketed + IEP + fused kernel: every (union, bucket)
+    cardinality is one fused pass; counts must stay bit-identical."""
+    pattern = star(4)
+    plan = _plan(pattern, iep=True)
+    assert plan is not None
+    cfg = dict(capacity=1 << 10,
+               degree_buckets=((8, 1.0), (10**9, 0.5)))
+    portable = count_embeddings(
+        pl_graph, plan, ExecutorConfig(use_pallas=False, **cfg))
+    fused = count_embeddings(
+        pl_graph, plan, ExecutorConfig(use_pallas=True, **cfg))
+    want = count_embeddings_oracle(pl_graph.n, pl_graph.edge_array(), pattern)
+    assert portable.count == fused.count == want
