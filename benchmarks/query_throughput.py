@@ -40,6 +40,8 @@ def run(full: bool = False) -> list[Row]:
     cold = engine.serve([QueryRequest(p) for p in patterns])
     cold_s = time.perf_counter() - t0
     assert all(not r.cache_hit for r in cold)
+    over = [r.pattern_name for r in cold if r.overflowed]
+    assert not over, f"overflowed (truncated) counts for {over}"
     cold_lat = engine.latency_percentiles()
 
     engine.reset_latencies()

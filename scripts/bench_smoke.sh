@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Benchmark smoke gate (wired into .github/workflows/ci.yml as a
+# NON-BLOCKING job): run benchmarks/run.py smoke-sized — the quick-tier
+# serve-path benchmark covers P1 (plus P2/P4) on tiny-er — and fail on
+# overflowed/truncated counts or a missing/empty artifact.
+#
+# The benchmark itself asserts zero overflow per query (truncated counts
+# are undercounts, never acceptable); the artifact gate below catches
+# the silent-failure mode where the bench "passes" without measuring.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export REPRO_BENCH_OUT="${REPRO_BENCH_OUT:-artifacts/bench-smoke}"
+
+python -m benchmarks.run --only query
+
+python - <<'EOF'
+import json
+import os
+import sys
+
+path = os.path.join(os.environ["REPRO_BENCH_OUT"], "query_throughput.json")
+rows = json.load(open(path))
+phases = {r["keys"]["phase"]: r for r in rows}
+fail = []
+for phase in ("cold", "warm", "speedup"):
+    if phase not in phases:
+        fail.append(f"missing {phase!r} row in {path}")
+    elif not phases[phase]["value"] > 0:
+        fail.append(f"{phase} throughput is {phases[phase]['value']}")
+if fail:
+    print("bench_smoke FAILED:", file=sys.stderr)
+    for f in fail:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+print(f"bench_smoke OK: cold={phases['cold']['value']:.3g} q/s, "
+      f"warm={phases['warm']['value']:.3g} q/s "
+      f"({phases['speedup']['value']:.1f}x)")
+EOF

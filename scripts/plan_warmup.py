@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Offline plan-store warmup: precompile patterns × modes into a
+persistent cache dir so serving replicas start warm (DESIGN.md §5).
+
+    PYTHONPATH=src python scripts/plan_warmup.py --cache-dir /var/cache/plans
+    PYTHONPATH=src python scripts/plan_warmup.py --cache-dir ./plans \
+        --dataset small-rmat --patterns P1,P2 --modes graphpi --no-iep
+
+For every (pattern, mode[, use_iep]) combination the tool runs the full
+cold pipeline — configuration search → plan build → JIT warmup → AOT
+export — through the same `PlanCache` code path serving uses, writing
+each result behind into the store.  A replica started with
+`launch/query_serve.py --cache-dir <dir> --warm-from-disk` (same graph,
+executor config, and layout) then serves its first query with zero
+configuration searches and zero fresh JIT traces.
+
+Combinations already persisted are skipped (load-through hits), so the
+tool is idempotent and cheap to re-run after adding patterns.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-dir", required=True,
+                    help="plan store directory to populate")
+    ap.add_argument("--dataset", default="tiny-er")
+    ap.add_argument("--patterns", default="P1,P2,P3,P4,P5,P6",
+                    help="comma-separated pattern names")
+    ap.add_argument("--modes", default="graphpi,graphzero",
+                    help="comma-separated subset of graphpi,graphzero,naive")
+    ap.add_argument("--no-iep", action="store_true",
+                    help="skip the use_iep=True variants")
+    ap.add_argument("--capacity", type=int, default=1 << 15)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="outer-loop vertex chunk (0 = executor default); "
+                         "must match the serving replica's --chunk")
+    args = ap.parse_args(argv)
+
+    from repro.configs.graphpi import get_dataset, get_pattern
+    from repro.core.executor import ExecutorConfig
+    from repro.query import PlanStore, QueryEngine, QueryRequest
+
+    graph = get_dataset(args.dataset)
+    store = PlanStore(args.cache_dir)
+    engine = QueryEngine(
+        graph, cfg=ExecutorConfig(capacity=args.capacity),
+        chunk=args.chunk or None, store=store,
+    )
+    print(f"[warmup] graph={graph.name} (|V|={graph.n}, |E|={graph.m}); "
+          f"store at {store.vdir} ({len(store)} entries)")
+
+    combos = []
+    for name in args.patterns.split(","):
+        for mode in args.modes.split(","):
+            iep_variants = [False] if (args.no_iep or mode == "naive") \
+                else [False, True]
+            for use_iep in iep_variants:
+                combos.append((name.strip(), mode.strip(), use_iep))
+
+    t0 = time.perf_counter()
+    for name, mode, use_iep in combos:
+        res = engine.submit(QueryRequest(
+            get_pattern(name), mode=mode, use_iep=use_iep))
+        how = ("warm" if res.cache_hit else
+               "persisted" if res.search_seconds == 0.0 else "compiled")
+        print(f"[warmup] {name:<6} mode={mode:<10} iep={int(use_iep)} "
+              f"{how:<9} count={res.count} "
+              f"(search {res.search_seconds:.3f}s, "
+              f"compile {res.compile_seconds:.3f}s)")
+        if res.overflowed:
+            print(f"[warmup] OVERFLOW on {name} — raise --capacity")
+            return 1
+
+    s = engine.cache.stats
+    print(f"[warmup] done in {time.perf_counter() - t0:.1f}s: "
+          f"{s.n_searches} searches, {s.n_compiles} compiles, "
+          f"{s.persist_hits} already persisted, "
+          f"{s.export_fails} export failures; "
+          f"store now has {len(store)} entries")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,9 @@ sites stay clean:
                  not exist yet
   make_mesh(...) drops the `axis_types=` kwarg (jax.sharding.AxisType)
                  on releases that predate explicit axis types
+  jax_export     jax.export (>= 0.4.30) / jax.experimental.export (old);
+                 None when neither exists — callers must degrade to
+                 re-JIT instead of AOT executable persistence
 
 Import-time cost is one getattr per name; no jax device state is
 touched (mesh construction stays lazy, see launch/mesh.py).
@@ -60,6 +63,16 @@ else:                                                # jax 0.4.x
 
         m = thread_resources.env.physical_mesh
         return None if m.empty else m
+
+
+# -------------------------------------------------------- jax.export ----
+try:                                                 # jax >= 0.4.30
+    from jax import export as jax_export
+except ImportError:                                  # pragma: no cover
+    try:
+        from jax.experimental import export as jax_export
+    except ImportError:
+        jax_export = None
 
 
 # ---------------------------------------------------------- AxisType ----

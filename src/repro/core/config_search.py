@@ -25,6 +25,31 @@ class Configuration:
     predicted_cost: float
 
 
+def config_to_dict(config: Configuration) -> dict:
+    """JSON-serializable record of a searched configuration.
+
+    `config_from_dict(config_to_dict(c)) == c` exactly (dataclass
+    equality), including after a JSON round trip — the on-disk plan
+    store (query/store.py) persists these so a replica restart replays
+    the search result instead of re-ranking the configuration space.
+    """
+    return {
+        "order": list(config.order),
+        "res_set": [list(r) for r in config.res_set],
+        "iep_k": int(config.iep_k),
+        "predicted_cost": float(config.predicted_cost),
+    }
+
+
+def config_from_dict(d: dict) -> Configuration:
+    return Configuration(
+        order=tuple(int(v) for v in d["order"]),
+        res_set=tuple((int(a), int(b)) for a, b in d["res_set"]),
+        iep_k=int(d["iep_k"]),
+        predicted_cost=float(d["predicted_cost"]),
+    )
+
+
 @dataclass
 class SearchResult:
     best: Configuration

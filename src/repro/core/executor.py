@@ -96,6 +96,17 @@ class ExecutorConfig:
             return jax.default_backend() == "tpu"
         return self.use_pallas
 
+    def fingerprint(self) -> str:
+        """Stable string of the facets baked into a jitted count program
+        (capacity, base selection, RESOLVED pallas path, bucket layout).
+        Safe to persist: equal strings ⟺ the same compiled program
+        modulo graph/plan, across processes and serving replicas."""
+        buckets = "none" if self.degree_buckets is None else ";".join(
+            f"{int(w)}:{float(f):.6g}" for w, f in self.degree_buckets)
+        return (f"cap={self.capacity},dyn={int(self.dynamic_base)},"
+                f"pallas={int(self.resolve_use_pallas())},"
+                f"buckets={buckets}")
+
 
 def auto_buckets(graph, *, small: int = 128, mid: int = 1024):
     """Degree buckets from the graph's degree distribution.
@@ -474,11 +485,66 @@ class Matcher:
             jax.block_until_ready(
                 self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
 
+    # --------------------------------------------------- AOT persistence
+    def export_bytes(self, *, chunk: int | None = None) -> bytes:
+        """Serialize the base-capacity count program ahead-of-time
+        (`jax.export` over the same (capacity, chunk-width) trace that
+        :meth:`warmup` compiles).  A fresh process feeds the bytes to
+        :meth:`install_exported` and skips Python re-tracing entirely;
+        escalated capacities still JIT live (they are rare retry paths).
+        """
+        from ..compat import jax_export
+
+        if jax_export is None:
+            raise RuntimeError("jax.export unavailable on this JAX version")
+        indptr, degrees, flat = self._arrays
+        width = min(chunk or self.cfg.capacity, self.cfg.capacity)
+        v0 = jnp.full((width,), self.graph.n, dtype=jnp.int32)
+        with enable_x64(True):
+            exported = jax_export.export(self._fn(self.cfg.capacity))(
+                indptr, degrees, flat, v0)
+        return exported.serialize()
+
+    def install_exported(self, data: bytes, *,
+                         chunk: int | None = None) -> None:
+        """Install a serialized AOT program as the base-capacity count
+        fn.  Raises ValueError when the blob targets another platform or
+        was traced against different array shapes — callers catch it and
+        fall back to a fresh :meth:`warmup` JIT."""
+        from ..compat import jax_export
+
+        if jax_export is None:
+            raise ValueError("jax.export unavailable on this JAX version")
+        exported = jax_export.deserialize(data)
+        backend = jax.default_backend()
+        if backend not in exported.platforms:
+            raise ValueError(
+                f"AOT program exported for {exported.platforms}, running "
+                f"on {backend!r}")
+        indptr, degrees, flat = self._arrays
+        width = min(chunk or self.cfg.capacity, self.cfg.capacity)
+        want = (tuple(indptr.shape), tuple(degrees.shape),
+                tuple(flat.shape), (width,))
+        got = tuple(tuple(a.shape) for a in exported.in_avals)
+        if got != want:
+            raise ValueError(f"AOT input shapes {got} != expected {want}")
+        self._fns[self.cfg.capacity] = jax.jit(exported.call)
+
+    def release(self) -> None:
+        """Drop every compiled executable and device-array reference so
+        LRU eviction actually frees HBM in long-lived serving processes
+        (the resident graph shared via ``arrays=`` stays alive at its
+        owner).  The matcher is unusable afterwards."""
+        self._fns.clear()
+        self._arrays = None
+
     def count(self, *, chunk: int | None = None) -> CountResult:
         """Chunked outer loop; a chunk that overflows capacity is bisected
         and retried (host-side adaptivity — the SPMD analogue of the
         paper's work splitting).  A single root that still overflows
         escalates to a doubled-capacity kernel so the count stays exact."""
+        if self._arrays is None:
+            raise RuntimeError("matcher was released (evicted from cache)")
         graph, cfg = self.graph, self.cfg
         indptr, degrees, flat = self._arrays
         with enable_x64(True):
@@ -610,7 +676,16 @@ class ShardedMatcher:
             jax.block_until_ready(
                 self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
 
+    def release(self) -> None:
+        """Mirror of :meth:`Matcher.release` — also drops the striped-v0
+        device array this matcher privately owns."""
+        self._fns.clear()
+        self._arrays = None
+        self._v0 = None
+
     def count(self) -> CountResult:
+        if self._arrays is None:
+            raise RuntimeError("matcher was released (evicted from cache)")
         indptr, degrees, flat = self._arrays
         # start from the last successful capacity so warm repeats skip
         # the doomed undersized passes, not just their compilation

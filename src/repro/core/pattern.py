@@ -105,6 +105,18 @@ class Pattern:
         edges = tuple((pos[u], pos[v]) for u, v in self.edges)
         return Pattern(self.n, edges, name=self.name)
 
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """JSON-serializable record; `from_dict` round-trips exactly."""
+        return {"n": self.n, "edges": [list(e) for e in self.edges],
+                "name": self.name}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Pattern":
+        return Pattern(int(d["n"]),
+                       tuple((int(u), int(v)) for u, v in d["edges"]),
+                       name=str(d.get("name", "")))
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Pattern({self.name or 'anon'}, n={self.n}, edges={list(self.edges)})"
 

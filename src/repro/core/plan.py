@@ -142,6 +142,57 @@ def build_plan(
     )
 
 
+# ----------------------------------------------------------- serialization
+def plan_to_dict(plan: MatchingPlan) -> dict:
+    """JSON-serializable record of a compiled plan.
+
+    The full derived structure is persisted (not just the build_plan
+    inputs) so `plan_from_dict` reconstructs the exact MatchingPlan
+    without re-running the IEP soundness validation — the on-disk plan
+    store's load path must stay O(read), and dataclass equality with
+    the original plan is what the round-trip tests pin down.
+    """
+    return {
+        "pattern": plan.pattern.to_dict(),
+        "order": list(plan.order),
+        "n": int(plan.n),
+        "preds": [list(p) for p in plan.preds],
+        "neqs": [list(q) for q in plan.neqs],
+        "restr": [[list(r) for r in level] for level in plan.restr],
+        "iep": None if plan.iep is None else {
+            "k": int(plan.iep.k),
+            "unions": [list(u) for u in plan.iep.unions],
+            "terms": [[int(c), list(idxs)] for c, idxs in plan.iep.terms],
+        },
+        "iep_divisor": int(plan.iep_divisor),
+        "res_set": [list(r) for r in plan.res_set],
+    }
+
+
+def plan_from_dict(d: dict) -> MatchingPlan:
+    iep = None
+    if d["iep"] is not None:
+        iep = IEPPlan(
+            k=int(d["iep"]["k"]),
+            unions=tuple(tuple(int(q) for q in u)
+                         for u in d["iep"]["unions"]),
+            terms=tuple((int(c), tuple(int(i) for i in idxs))
+                        for c, idxs in d["iep"]["terms"]),
+        )
+    return MatchingPlan(
+        pattern=Pattern.from_dict(d["pattern"]),
+        order=tuple(int(v) for v in d["order"]),
+        n=int(d["n"]),
+        preds=tuple(tuple(int(p) for p in ps) for ps in d["preds"]),
+        neqs=tuple(tuple(int(q) for q in qs) for qs in d["neqs"]),
+        restr=tuple(tuple((int(c), int(s)) for c, s in level)
+                    for level in d["restr"]),
+        iep=iep,
+        iep_divisor=int(d["iep_divisor"]),
+        res_set=tuple((int(a), int(b)) for a, b in d["res_set"]),
+    )
+
+
 def best_iep_k(
     pattern: Pattern, order: Schedule, res_set: Sequence[Restriction]
 ) -> int:

@@ -13,7 +13,8 @@ axis, fine-grained task striping).  `--mode graphzero` runs the baseline
 Since the query-serving subsystem landed, this CLI is a one-request
 client of the same `PlanCache`/`QueryEngine` code path that
 `launch/query_serve.py` serves traffic through — there is exactly one
-request path.
+request path.  With `--cache-dir` repeat invocations load the persisted
+plan (and its AOT executable) instead of re-searching/re-tracing.
 """
 from __future__ import annotations
 
@@ -35,12 +36,16 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=1 << 15)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--single-device", action="store_true")
+    ap.add_argument("--cache-dir", default="",
+                    help="persistent plan store: repeat invocations skip "
+                         "the configuration search (and the JIT, single-"
+                         "device) via the on-disk cache (DESIGN.md §5)")
     args = ap.parse_args(argv)
 
     from ..configs.graphpi import get_dataset, get_pattern
     from ..core.executor import ExecutorConfig
     from ..launch.mesh import make_host_mesh
-    from ..query import QueryEngine, QueryRequest
+    from ..query import PlanStore, QueryEngine, QueryRequest
 
     pattern = get_pattern(args.pattern)
     graph = get_dataset(args.dataset)
@@ -51,17 +56,21 @@ def main(argv=None):
     mesh = None
     if not args.single_device and len(jax.devices()) > 1:
         mesh = make_host_mesh(model=args.model_axis)
+    store = PlanStore(args.cache_dir) if args.cache_dir else None
     engine = QueryEngine(graph, cfg=ExecutorConfig(capacity=args.capacity),
-                         mesh=mesh)
+                         mesh=mesh, store=store)
     print(f"[mine] stats: tri_cnt={engine.stats.tri_cnt} "
           f"({engine.stats_seconds:.2f}s)")
 
     res = engine.submit(QueryRequest(
         pattern, use_iep=args.use_iep, verify=args.verify, mode=args.mode))
+    cs = engine.cache.stats
+    how = ("cache hit" if res.cache_hit
+           else "persisted plan" if cs.persist_hits else "cache miss")
     print(f"[mine] config: schedule={res.order} restrictions={res.res_set} "
           f"iep_k={res.iep_k} (search {res.search_seconds:.3f}s, "
-          f"compile {res.compile_seconds:.3f}s, "
-          f"{'cache hit' if res.cache_hit else 'cache miss'})")
+          f"compile {res.compile_seconds:.3f}s, {how}"
+          f"{', AOT executable' if cs.aot_loads else ''})")
     exec_s = res.latency_s - res.search_seconds - res.compile_seconds
     print(f"[mine] count={res.count}  wall={exec_s:.3f}s  "
           f"(query latency {res.latency_s:.3f}s incl. search+compile; "

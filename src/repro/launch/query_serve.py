@@ -19,6 +19,13 @@ through the `PlanCache`.  Requests come from a JSON-lines file —
 plus isomorphic relabelings of each (cache hits), `smoke` is the
 2-pattern CI variant.  Per-query latency, p50/p99, and the cache
 counters (hits never re-search or re-JIT) are reported at the end.
+
+With `--cache-dir` the plan cache persists across restarts (searched
+configurations + AOT-compiled executables, DESIGN.md §5): a restarted
+replica replays a prior workload with zero configuration searches and
+zero fresh JIT traces.  `--warm-from-disk` preloads every compatible
+persisted plan before the first request.  `scripts/plan_warmup.py`
+populates a store offline (P1–P6 × modes).
 """
 from __future__ import annotations
 
@@ -90,6 +97,13 @@ def main(argv=None):
                     help="outer-loop vertex chunk (0 = executor default)")
     ap.add_argument("--max-entries", type=int, default=256,
                     help="plan-cache LRU bound (0 = unbounded)")
+    ap.add_argument("--cache-dir", default="",
+                    help="persistent plan store directory: searched "
+                         "configurations + AOT executables survive "
+                         "restarts (DESIGN.md §5)")
+    ap.add_argument("--warm-from-disk", action="store_true",
+                    help="preload every compatible persisted plan before "
+                         "serving (requires --cache-dir)")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--single-device", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -100,23 +114,35 @@ def main(argv=None):
     from ..configs.graphpi import get_dataset, get_pattern
     from ..core.executor import ExecutorConfig
     from ..launch.mesh import make_host_mesh
-    from ..query import PlanCache, QueryEngine, canonical_key
+    from ..query import PlanCache, PlanStore, QueryEngine, canonical_key
+
+    if args.warm_from_disk and not args.cache_dir:
+        print("[serve] --warm-from-disk requires --cache-dir")
+        return 2
 
     graph = get_dataset(args.dataset)
     mesh = None
     if not args.single_device and len(jax.devices()) > 1:
         mesh = make_host_mesh(model=args.model_axis)
+    store = PlanStore(args.cache_dir) if args.cache_dir else None
     engine = QueryEngine(
         graph,
         cfg=ExecutorConfig(capacity=args.capacity),
         mesh=mesh,
         chunk=args.chunk or None,
-        cache=PlanCache(max_entries=args.max_entries or None),
+        cache=PlanCache(max_entries=args.max_entries or None, store=store),
     )
     print(f"[serve] graph={graph.name} (|V|={graph.n}, |E|={graph.m}) "
           f"resident on {engine.summary()['devices']} device(s); "
           f"stats in {engine.stats_seconds:.2f}s (tri_cnt="
           f"{engine.stats.tri_cnt})")
+    if store is not None:
+        print(f"[serve] plan store at {store.vdir} ({len(store)} entries)")
+    if args.warm_from_disk:
+        n = engine.warm_from_disk()
+        print(f"[serve] warm-from-disk: {n} plan(s) preloaded "
+              f"({engine.cache.stats.aot_loads} AOT executables, "
+              f"{engine.cache.stats.n_compiles} re-JITs)")
 
     requests = build_requests(args, get_pattern)
     distinct = len({canonical_key(r.pattern) for r in requests})
@@ -135,6 +161,14 @@ def main(argv=None):
           f"({s['cache_entries']} entries); {cache['n_searches']} config "
           f"searches ({cache['search_seconds']:.3f}s), {cache['n_compiles']} "
           f"compiles ({cache['compile_seconds']:.3f}s)")
+    if "store" in s:
+        print(f"[serve] store: {cache['persist_hits']} persist hits "
+              f"({cache['aot_loads']} AOT loads in "
+              f"{cache['aot_load_seconds']:.3f}s, "
+              f"{cache['aot_load_fails']} AOT rejects), "
+              f"{s['store']['saves']} saves, "
+              f"{cache['export_fails']} export failures, "
+              f"rejects={s['store']['rejects']}")
 
     rc = 0
     bad = [r for r in results if r.verified is False]

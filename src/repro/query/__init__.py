@@ -1,16 +1,20 @@
 # Pattern-query serving subsystem (DESIGN.md §5): canonical pattern
-# identity (canon), plan/matcher memoization (cache), and the batched
-# request engine over a resident graph (engine).
+# identity (canon), plan/matcher memoization (cache), the persistent
+# on-disk plan index + AOT executables (store), and the batched request
+# engine over a resident graph (engine).
 from .canon import canonical_form, canonical_key, relabeled_variant
 from .cache import CacheEntry, PlanCache
 from .engine import QueryEngine, QueryRequest, QueryResult
+from .store import PlanStore, StoreRecord
 
 __all__ = [
     "CacheEntry",
     "PlanCache",
+    "PlanStore",
     "QueryEngine",
     "QueryRequest",
     "QueryResult",
+    "StoreRecord",
     "canonical_form",
     "canonical_key",
     "relabeled_variant",

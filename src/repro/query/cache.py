@@ -14,7 +14,17 @@ Cache key (DESIGN.md §5):
    mode, use_iep)
 Anything that changes the searched configuration or the compiled
 program invalidates the entry by construction; eviction beyond
-`max_entries` is LRU.
+`max_entries` is LRU, and evicted matchers are `release()`d so their
+compiled executables and device arrays actually free HBM in long-lived
+serving processes.
+
+With a `PlanStore` attached (query/store.py) the cache becomes
+load-through / write-behind: an in-memory miss first consults the
+on-disk index — a persisted entry skips the configuration search
+entirely and, when an AOT executable is present and accepted, skips
+Python re-tracing too (`persist_hits` / `aot_loads` counters); a full
+miss writes the searched result back after warmup (`export_fails`
+counts AOT serialization failures — the entry still persists plan-only).
 """
 from __future__ import annotations
 
@@ -43,10 +53,11 @@ MODES = ("graphpi", "graphzero", "naive")
 DEFAULT_MAX_ENTRIES = 256
 
 
-def executor_fingerprint(cfg: ExecutorConfig) -> tuple:
-    """The ExecutorConfig facets baked into a jitted count program."""
-    return (cfg.capacity, cfg.dynamic_base, cfg.resolve_use_pallas(),
-            cfg.degree_buckets)
+def executor_fingerprint(cfg: ExecutorConfig) -> str:
+    """The ExecutorConfig facets baked into a jitted count program, as
+    the stable string `ExecutorConfig.fingerprint()` — safe to persist
+    (the on-disk store digests the whole entry key)."""
+    return cfg.fingerprint()
 
 
 def layout_fingerprint(mesh, axis, chunk: int | None,
@@ -104,22 +115,30 @@ class CacheEntry:
 @dataclass
 class CacheStats:
     hits: int = 0
-    misses: int = 0
-    n_searches: int = 0
-    n_compiles: int = 0
+    misses: int = 0              # in-memory misses (incl. persist hits)
+    n_searches: int = 0          # configuration searches actually run
+    n_compiles: int = 0          # fresh JIT traces (warmup compiles)
     evictions: int = 0
+    persist_hits: int = 0        # misses served from the on-disk store
+    preloads: int = 0            # entries installed by warm-from-disk
+    aot_loads: int = 0           # store loads whose AOT executable loaded
+    aot_load_fails: int = 0      # AOT blob rejected -> re-JIT fallback
+    export_fails: int = 0        # write-behind AOT export failures
     search_seconds: float = 0.0
     compile_seconds: float = 0.0
+    aot_load_seconds: float = 0.0
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
 
 
 class PlanCache:
-    """LRU cache of warmed (Configuration, MatchingPlan, Matcher) triples."""
+    """LRU cache of warmed (Configuration, MatchingPlan, Matcher) triples,
+    optionally backed by a persistent on-disk `PlanStore`."""
 
-    def __init__(self, *, max_entries: int | None = None):
+    def __init__(self, *, max_entries: int | None = None, store=None):
         self.max_entries = max_entries
+        self.store = store                    # PlanStore | None
         self.stats = CacheStats()
         self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
 
@@ -175,6 +194,18 @@ class PlanCache:
             return entry, True
 
         self.stats.misses += 1
+        # load-through: a persisted entry skips the configuration search
+        # (and, when its AOT executable is accepted, the JIT trace too)
+        if self.store is not None:
+            rec = self.store.load(key)
+            if rec is not None:
+                self.stats.persist_hits += 1
+                entry = self._install_record(
+                    rec, key, graph, cfg=cfg, mesh=mesh, axis=axis,
+                    chunk=chunk, arrays=arrays, warm=warm)
+                self._insert(key, entry)
+                return entry, False
+
         canon = canonical_form(pattern)
         t0 = time.perf_counter()
         if mode == "graphpi":
@@ -195,8 +226,21 @@ class PlanCache:
         else:
             matcher = Matcher(graph, plan, cfg, arrays=arrays)
         compile_s = 0.0
+        exec_bytes = None
         if warm:
             t0 = time.perf_counter()
+            if mesh is None and self.store is not None:
+                # AOT export BEFORE warmup: export traces/lowers the
+                # program once and install makes warmup compile that
+                # exact lowering — one trace total instead of
+                # trace-compile-retrace, and local serving runs the
+                # same bytes a restarted replica will load
+                try:
+                    exec_bytes = matcher.export_bytes(chunk=chunk)
+                    matcher.install_exported(exec_bytes, chunk=chunk)
+                except Exception:
+                    self.stats.export_fails += 1
+                    exec_bytes = None
             if mesh is not None:
                 matcher.warmup()          # chunk is baked into the stripes
             else:
@@ -210,9 +254,98 @@ class PlanCache:
             matcher=matcher, sharded=mesh is not None, mode=mode,
             search_seconds=search_s, compile_seconds=compile_s,
         )
+        # write-behind: persist the searched result (+ the AOT executable
+        # exported above on the single-device path; sharded programs bake
+        # in mesh/device state, so they persist plan-only and re-JIT on
+        # restart)
+        if self.store is not None:
+            self.store.save(
+                key, pattern=canon, config=config, plan=plan,
+                exec_bytes=exec_bytes, search_seconds=search_s,
+                compile_seconds=compile_s)
+        self._insert(key, entry)
+        return entry, False
+
+    # -------------------------------------------------------- persistence
+    def _install_record(self, rec, key: tuple, graph: GraphCSR, *,
+                        cfg: ExecutorConfig, mesh, axis: str,
+                        chunk: int | None, arrays, warm: bool) -> CacheEntry:
+        """Turn a loaded StoreRecord into a live warmed entry — no
+        configuration search; no JIT trace either when the record's AOT
+        executable installs cleanly (else fall back to a fresh warmup)."""
+        if mesh is not None:
+            matcher = ShardedMatcher(graph, rec.plan, mesh, axis=axis,
+                                     cfg=cfg, chunk=chunk, arrays=arrays)
+        else:
+            matcher = Matcher(graph, rec.plan, cfg, arrays=arrays)
+        compile_s = 0.0
+        if warm:
+            installed = False
+            if rec.exec_bytes is not None and mesh is None:
+                try:
+                    matcher.install_exported(rec.exec_bytes, chunk=chunk)
+                    installed = True
+                except Exception:
+                    self.stats.aot_load_fails += 1
+            t0 = time.perf_counter()
+            if mesh is not None:
+                matcher.warmup()
+            else:
+                matcher.warmup(chunk=chunk)
+            dt = time.perf_counter() - t0
+            if installed:
+                self.stats.aot_loads += 1
+                self.stats.aot_load_seconds += dt
+            else:
+                compile_s = dt
+                self.stats.n_compiles += 1
+                self.stats.compile_seconds += dt
+        return CacheEntry(
+            canon_key=key[0], pattern=rec.pattern, config=rec.config,
+            plan=rec.plan, matcher=matcher, sharded=mesh is not None,
+            mode=rec.mode, search_seconds=0.0, compile_seconds=compile_s,
+        )
+
+    def preload(self, graph: GraphCSR, stats: GraphStats, *,
+                cfg: ExecutorConfig | None = None, mesh=None,
+                axis: str = "data", chunk: int | None = None,
+                arrays=None, warm: bool = True) -> int:
+        """Warm-from-disk: install every store record compatible with the
+        current serving context (same graph/executor/layout fingerprints
+        — checked by re-deriving each record's key digest) before the
+        first request arrives.  Returns the number of entries installed."""
+        if self.store is None:
+            return 0
+        from .store import key_digest
+
+        cfg = cfg or ExecutorConfig()
+        gfp = graph_fingerprint(graph, stats)
+        lfp = layout_fingerprint(mesh, axis, chunk, cfg)
+        installed = 0
+        for rec in self.store.records():
+            key = self.entry_key(rec.pattern, gfp, cfg, mode=rec.mode,
+                                 use_iep=rec.use_iep, layout_fp=lfp)
+            if key_digest(key) != rec.digest or key in self._entries:
+                continue
+            self.stats.preloads += 1
+            self._insert(key, self._install_record(
+                rec, key, graph, cfg=cfg, mesh=mesh, axis=axis,
+                chunk=chunk, arrays=arrays, warm=warm))
+            installed += 1
+        return installed
+
+    # ------------------------------------------------------------ eviction
+    def _insert(self, key: tuple, entry: CacheEntry) -> None:
         self._entries[key] = entry
         if self.max_entries is not None:
             while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
+                _, evicted = self._entries.popitem(last=False)
+                # explicitly drop the warmed matcher's compiled
+                # executables + device-array references: entries in a
+                # long-lived serving process must release HBM on
+                # eviction, not whenever GC gets around to the cycle.
+                # (max_entries=0 pops `entry` itself — the caller is
+                # about to count on it, so it must stay live.)
+                if evicted is not entry:
+                    evicted.matcher.release()
                 self.stats.evictions += 1
-        return entry, False

@@ -85,13 +85,18 @@ class QueryEngine:
     def __init__(self, graph: GraphCSR, *, cfg: ExecutorConfig | None = None,
                  mesh=None, axis: str = "data", chunk: int | None = None,
                  cache: PlanCache | None = None,
+                 store=None,
                  stats: GraphStats | None = None):
         self.graph = graph
         self.cfg = cfg or ExecutorConfig()
         self.mesh = mesh
         self.axis = axis
         self.chunk = chunk
-        self.cache = cache or PlanCache(max_entries=DEFAULT_MAX_ENTRIES)
+        if cache is None:
+            cache = PlanCache(max_entries=DEFAULT_MAX_ENTRIES, store=store)
+        elif store is not None and cache.store is None:
+            cache.store = store             # attach persistence to the
+        self.cache = cache                  # caller-provided cache
         self._arrays = device_graph(graph)     # ONE resident CSR upload
         t0 = time.perf_counter()
         self.stats = stats if stats is not None else compute_stats(
@@ -148,6 +153,15 @@ class QueryEngine:
     def serve(self, requests) -> list[QueryResult]:
         return [self.submit(r) for r in requests]
 
+    def warm_from_disk(self) -> int:
+        """Preload every persisted plan compatible with this engine's
+        (graph, executor, layout) before the first request arrives, so a
+        restarted replica serves warm from query one.  Returns the
+        number of entries installed (0 without an attached store)."""
+        return self.cache.preload(
+            self.graph, self.stats, cfg=self.cfg, mesh=self.mesh,
+            axis=self.axis, chunk=self.chunk, arrays=self._arrays)
+
     # ------------------------------------------------------------- reporting
     def reset_latencies(self) -> None:
         """Start a fresh latency window (e.g. between benchmark phases);
@@ -166,7 +180,7 @@ class QueryEngine:
         }
 
     def summary(self) -> dict:
-        return {
+        out = {
             "graph": self.graph.name,
             "devices": 1 if self.mesh is None else int(
                 np.prod(list(self.mesh.shape.values()))),
@@ -175,3 +189,6 @@ class QueryEngine:
             "cache": self.cache.stats.as_dict(),
             "cache_entries": len(self.cache),
         }
+        if self.cache.store is not None:
+            out["store"] = self.cache.store.stats.as_dict()
+        return out

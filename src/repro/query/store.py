@@ -1,0 +1,289 @@
+"""PlanStore — the persistent half of the plan cache (DESIGN.md §5).
+
+The in-memory `PlanCache` pays the GraphPi configuration search and the
+executor JIT once per process and loses both on restart.  Cache keys are
+already process-stable (canonical pattern sha256 + content fingerprints
+— nothing keyed on `id()` or Python hashing), so persistence is purely
+additive: this module maps each key to an on-disk record holding
+
+  * the searched `Configuration` (core/config_search.py dict round-trip),
+  * the compiled `MatchingPlan` (core/plan.py dict round-trip), and
+  * optionally the AOT-compiled executable — the `jax.export`
+    serialization of the exact (capacity, chunk-width) trace the matcher
+    warms up, so a replica restart skips Python re-tracing too.
+
+Layout under the cache dir (one schema version = one directory, so a
+format change never aliases old records):
+
+    <root>/v1/<key-digest>.json      header + config + plan records
+    <root>/v1/<key-digest>.exec      serialized AOT executable (optional)
+
+`<key-digest>` is sha256 over the canonical JSON of the full PlanCache
+entry key — (canonical pattern key, graph fingerprint, executor
+fingerprint string, mode, use_iep, layout fingerprint) — so anything
+that would change the searched configuration or the compiled program
+lands at a different path by construction.
+
+Invalidation headers.  Every record carries (schema_version, jax,
+jaxlib, repro_fingerprint, backend).  A version or code-fingerprint
+mismatch REJECTS the whole record: plans built by different plan-time
+code may be stale in ways no structural check catches.  A backend
+mismatch (e.g. a store written on CPU, loaded on TPU) only drops the
+executable — the config/plan records are device-independent, so the
+loader falls back to re-JIT while still skipping the search.  All
+rejections are counted, never raised: a corrupt or stale store must
+degrade to cold-start, not take down serving.
+
+Writes are atomic (tmp file + `os.replace`) so a crashed writer or two
+racing replicas warming the same dir never leave torn records.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Iterator
+
+import jax
+import jaxlib
+
+from ..core.config_search import (
+    Configuration, config_from_dict, config_to_dict,
+)
+from ..core.pattern import Pattern
+from ..core.plan import MatchingPlan, plan_from_dict, plan_to_dict
+
+SCHEMA_VERSION = 1
+
+# Modules whose source shapes plan records or compiled programs — the
+# full plan-time pipeline (schedule/restriction generation, perf-model
+# ranking, configuration search) plus the executor/kernel code the AOT
+# trace bakes in: a drift in any of them invalidates every persisted
+# entry (cheap and sound — false invalidation just costs one cold start
+# per entry).
+_FINGERPRINTED_MODULES = (
+    "repro.core.config_search",
+    "repro.core.executor",
+    "repro.core.iep",
+    "repro.core.perf_model",
+    "repro.core.plan",
+    "repro.core.restrictions",
+    "repro.core.schedule",
+    "repro.kernels.ops",
+    "repro.kernels.intersect",
+    "repro.query.canon",
+)
+
+
+@functools.lru_cache(maxsize=1)
+def repro_fingerprint() -> str:
+    """sha256 over the source bytes of the plan/executor-shaping modules."""
+    import importlib
+
+    h = hashlib.sha256()
+    for name in _FINGERPRINTED_MODULES:
+        mod = importlib.import_module(name)
+        with open(mod.__file__, "rb") as f:
+            h.update(name.encode())
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def _jsonify(obj):
+    """Canonical JSON-compatible form of a (nested-tuple) cache key."""
+    if isinstance(obj, (tuple, list)):
+        return [_jsonify(x) for x in obj]
+    return obj
+
+
+def key_digest(key: tuple) -> str:
+    """Stable digest of a PlanCache entry key (any nesting of primitives)."""
+    payload = json.dumps(_jsonify(key), separators=(",", ":"),
+                         sort_keys=False)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclass
+class StoreStats:
+    loads: int = 0               # records successfully loaded
+    misses: int = 0              # key not present
+    saves: int = 0
+    exec_drops: int = 0          # executable rejected, plans kept
+    save_fails: int = 0
+    rejects: dict = field(default_factory=dict)   # reason -> count
+
+    def reject(self, reason: str) -> None:
+        self.rejects[reason] = self.rejects.get(reason, 0) + 1
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__, rejects=dict(self.rejects))
+
+
+@dataclass
+class StoreRecord:
+    """One rehydrated entry: everything the cache needs except a matcher."""
+
+    digest: str
+    pattern: Pattern             # canonical labeling (as searched)
+    config: Configuration
+    plan: MatchingPlan
+    mode: str
+    use_iep: bool
+    sharded: bool
+    exec_bytes: bytes | None     # None = re-JIT fallback
+    header: dict                 # raw record header (reporting/debugging)
+
+    @property
+    def search_seconds(self) -> float:
+        return float(self.header.get("search_seconds", 0.0))
+
+
+class PlanStore:
+    """Versioned on-disk index of searched plans + AOT executables."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.vdir = os.path.join(root, f"v{SCHEMA_VERSION}")
+        os.makedirs(self.vdir, exist_ok=True)
+        self.stats = StoreStats()
+
+    def __len__(self) -> int:
+        return sum(1 for f in os.listdir(self.vdir) if f.endswith(".json"))
+
+    # ------------------------------------------------------------ paths
+    def _paths(self, digest: str) -> tuple[str, str]:
+        base = os.path.join(self.vdir, digest)
+        return base + ".json", base + ".exec"
+
+    def header(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "jax": jax.__version__,
+            "jaxlib": jaxlib.__version__,
+            "repro_fingerprint": repro_fingerprint(),
+            "backend": jax.default_backend(),
+        }
+
+    def _check_header(self, rec: dict) -> str | None:
+        """None when the record is usable, else the rejection reason."""
+        if rec.get("schema_version") != SCHEMA_VERSION:
+            return "schema_version"
+        if rec.get("jax") != jax.__version__ or \
+                rec.get("jaxlib") != jaxlib.__version__:
+            return "jax_version"
+        if rec.get("repro_fingerprint") != repro_fingerprint():
+            return "repro_fingerprint"
+        return None
+
+    # ------------------------------------------------------------- save
+    def save(self, key: tuple, *, pattern: Pattern, config: Configuration,
+             plan: MatchingPlan, exec_bytes: bytes | None = None,
+             search_seconds: float = 0.0,
+             compile_seconds: float = 0.0) -> str | None:
+        """Write-behind one entry; returns the digest, or None when the
+        write failed (serving never crashes on a read-only/full disk)."""
+        digest = key_digest(key)
+        json_path, exec_path = self._paths(digest)
+        record = {
+            **self.header(),
+            "key": _jsonify(key),
+            "mode": key[3],
+            "use_iep": bool(key[4]),
+            "sharded": bool(key[5] and key[5][0] == "sharded"),
+            "created_at": time.time(),
+            "search_seconds": float(search_seconds),
+            "compile_seconds": float(compile_seconds),
+            "pattern": pattern.to_dict(),
+            "config": config_to_dict(config),
+            "plan": plan_to_dict(plan),
+            "has_executable": exec_bytes is not None,
+        }
+        try:
+            if exec_bytes is not None:
+                self._atomic_write(exec_path, exec_bytes)
+            self._atomic_write(
+                json_path,
+                json.dumps(record, separators=(",", ":")).encode())
+        except OSError:
+            self.stats.save_fails += 1
+            return None
+        self.stats.saves += 1
+        return digest
+
+    def _atomic_write(self, path: str, data: bytes) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.vdir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # ------------------------------------------------------------- load
+    def load(self, key: tuple) -> StoreRecord | None:
+        """Load-through for one key; None = absent or rejected (counted)."""
+        return self._load_digest(key_digest(key))
+
+    def _load_digest(self, digest: str) -> StoreRecord | None:
+        json_path, exec_path = self._paths(digest)
+        if not os.path.exists(json_path):
+            self.stats.misses += 1
+            return None
+        try:
+            with open(json_path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.stats.reject("corrupt")
+            return None
+        reason = self._check_header(rec)
+        if reason is not None:
+            self.stats.reject(reason)
+            return None
+        try:
+            pattern = Pattern.from_dict(rec["pattern"])
+            config = config_from_dict(rec["config"])
+            plan = plan_from_dict(rec["plan"])
+        except (KeyError, TypeError, ValueError):
+            self.stats.reject("corrupt")
+            return None
+        exec_bytes = None
+        if rec.get("has_executable"):
+            if rec.get("backend") != jax.default_backend():
+                self.stats.exec_drops += 1      # plans survive, exe doesn't
+            else:
+                try:
+                    with open(exec_path, "rb") as f:
+                        exec_bytes = f.read()
+                except OSError:
+                    self.stats.exec_drops += 1
+        self.stats.loads += 1
+        return StoreRecord(
+            digest=digest,
+            pattern=pattern,
+            config=config,
+            plan=plan,
+            mode=str(rec.get("mode", "graphpi")),
+            use_iep=bool(rec.get("use_iep", False)),
+            sharded=bool(rec.get("sharded", False)),
+            exec_bytes=exec_bytes,
+            header={k: rec[k] for k in rec
+                    if k not in ("pattern", "config", "plan")},
+        )
+
+    def records(self) -> Iterator[StoreRecord]:
+        """Every loadable record (rejections counted, not raised) — the
+        warm-from-disk path iterates these and keeps the compatible ones."""
+        for fname in sorted(os.listdir(self.vdir)):
+            if not fname.endswith(".json"):
+                continue
+            rec = self._load_digest(fname[: -len(".json")])
+            if rec is not None:
+                yield rec

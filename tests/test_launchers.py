@@ -10,6 +10,23 @@ def test_mine_end_to_end_graphpi_mode():
     assert rc == 0
 
 
+def test_mine_cache_dir_persists_across_invocations(tmp_path, capsys):
+    from repro.launch.mine import main
+
+    args = ["--pattern", "triangle", "--dataset", "tiny-er",
+            "--capacity", str(1 << 13), "--single-device",
+            "--cache-dir", str(tmp_path)]
+    assert main(args) == 0
+    cold = capsys.readouterr().out
+    assert "cache miss" in cold
+    # second process-equivalent invocation: plan + AOT executable come
+    # from disk, no configuration search
+    assert main(args) == 0
+    warm = capsys.readouterr().out
+    assert "persisted plan" in warm
+    assert "search 0.000s" in warm
+
+
 def test_mine_graphzero_and_naive_agree():
     from repro.launch.mine import main
 
