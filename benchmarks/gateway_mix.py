@@ -1,0 +1,149 @@
+"""Gateway mixed-traffic benchmark: coalescing + interference evidence.
+
+Two claims the unified front door makes, both counter-asserted here:
+
+ (a) COALESCING — bursty duplicate patterns are cheap: a round holding
+     N tickets of one isomorphism class dispatches ONE plan execution
+     (engine.executions < requests, asserted), because the scheduler
+     groups same-class tickets before counting.
+
+ (b) BOUNDED INTERFERENCE — graph-query latency under concurrent LM
+     decode stays within a recorded factor of solo latency: the same
+     warm burst workload is served once with the graph tenant alone and
+     once co-scheduled with a hot `LMDecodeWorkload`; the artifact
+     records solo p50, mixed p50, and their ratio, and the run fails if
+     the ratio exceeds INTERFERENCE_BOUND (generous — CPU CI timing is
+     noisy; the point is a recorded bound, not a tight one).
+
+Both phases run against a prewarmed plan cache (search/JIT excluded,
+same methodology as the paper's timing) on the CPU smoke config.
+"""
+from __future__ import annotations
+
+from repro.core.executor import ExecutorConfig
+from repro.query import QueryEngine, QueryRequest, relabeled_variant
+from repro.serve.gateway import (
+    Gateway, GraphQueryWorkload, LMDecodeWorkload, Share,
+)
+from repro.serve.session import LMSession
+
+from ._util import Row, emit, get_pattern, graph_of, stats_of
+
+QUICK = {"dataset": "tiny-er", "patterns": ["P1", "triangle"],
+         "capacity": 1 << 13, "bursts": 2, "dups": 2,
+         "arch": "qwen3-1.7b", "batch": 2, "prompt_len": 16}
+FULL = {"dataset": "small-rmat", "patterns": ["P1", "P2", "P4"],
+        "capacity": 1 << 15, "bursts": 3, "dups": 3,
+        "arch": "qwen3-1.7b", "batch": 4, "prompt_len": 32}
+INTERFERENCE_BOUND = 100.0   # mixed p50 must stay within this × solo p50
+
+
+def _burst_requests(patterns, bursts: int, dups: int):
+    """`bursts` rounds, each: every pattern once plus `dups` isomorphic
+    relabelings — the duplicate-heavy shape coalescing exists for."""
+    reqs = []
+    for b in range(bursts):
+        for i, p in enumerate(patterns):
+            reqs.append(QueryRequest(p))
+            for d in range(dups):
+                reqs.append(QueryRequest(
+                    relabeled_variant(p, seed=101 * b + 13 * i + d)))
+    return reqs
+
+
+def _serve_phase(engine, requests, quantum: int, lm_spec=None):
+    """Drain `requests` through a Gateway; returns (gateway, results)."""
+    gw = Gateway()
+    wl = gw.add(GraphQueryWorkload(engine, requests),
+                Share(quantum=quantum))
+    if lm_spec is not None:
+        gw.add(LMDecodeWorkload(lm_spec), Share(quantum=2))
+    gw.run(warmup=False)     # engine prewarmed; LM session started below
+    return gw, wl.results()
+
+
+def run(full: bool = False) -> list[Row]:
+    spec = FULL if full else QUICK
+    graph = graph_of(spec["dataset"])
+    patterns = [get_pattern(n) for n in spec["patterns"]]
+    engine = QueryEngine(
+        graph,
+        cfg=ExecutorConfig(capacity=spec["capacity"]),
+        stats=stats_of(spec["dataset"]),
+    )
+    # prewarm every class: both phases measure steady-state execution
+    for p in patterns:
+        engine.plan(QueryRequest(p))
+
+    burst = len(patterns) * (1 + spec["dups"])
+    keys = {"dataset": spec["dataset"], "patterns": len(patterns),
+            "burst": burst, "bursts": spec["bursts"]}
+
+    # ---- phase 1: solo graph ------------------------------------------
+    engine.reset_latencies()
+    reqs = _burst_requests(patterns, spec["bursts"], spec["dups"])
+    _, solo_results = _serve_phase(engine, reqs, quantum=burst)
+    solo = engine.latency_percentiles()
+    n_requests = len(reqs)
+    n_exec = engine.executions
+    n_coal = engine.coalesced
+    assert n_exec < n_requests, (
+        f"coalescing must dispatch fewer executions ({n_exec}) than "
+        f"requests ({n_requests})")
+    assert n_coal == n_requests - n_exec
+    by_class: dict[str, int] = {}
+    for r in solo_results:
+        assert not r.overflowed, f"overflowed count for {r.pattern_name}"
+        assert by_class.setdefault(r.canon_key, r.count) == r.count
+
+    # ---- phase 2: graph + hot LM decode -------------------------------
+    session = LMSession(
+        spec["arch"], smoke=True, batch=spec["batch"],
+        prompt_len=spec["prompt_len"],
+        gen=4 * spec["bursts"] * len(patterns) + 8,
+    )
+    session.start()
+    engine.reset_latencies()
+    exec_before = engine.executions
+    reqs = _burst_requests(patterns, spec["bursts"], spec["dups"])
+    gw, mixed_results = _serve_phase(engine, reqs, quantum=burst,
+                                     lm_spec=session)
+    mixed = engine.latency_percentiles()
+    for r in mixed_results:
+        # scheduling must never change a count
+        assert by_class[r.canon_key] == r.count, r.pattern_name
+    factor = (mixed["p50_ms"] / solo["p50_ms"]
+              if solo["p50_ms"] > 0 else float("inf"))
+    assert factor <= INTERFERENCE_BOUND, (
+        f"graph p50 under decode is {factor:.1f}x solo "
+        f"(bound {INTERFERENCE_BOUND}x)")
+    lm = session.metrics()
+
+    return [
+        Row("gateway_mix", {**keys, "phase": "coalesce"},
+            n_exec, "executions",
+            {"requests": n_requests, "coalesced": n_coal,
+             "cache_hits": engine.cache.stats.hits}),
+        Row("gateway_mix", {**keys, "phase": "solo"},
+            solo["p50_ms"], "ms",
+            {"p99_ms": solo["p99_ms"], "n": solo["n"]}),
+        Row("gateway_mix", {**keys, "phase": "mixed"},
+            mixed["p50_ms"], "ms",
+            {"p99_ms": mixed["p99_ms"], "n": mixed["n"],
+             "executions": engine.executions - exec_before,
+             "lm_steps": lm["steps_done"],
+             "lm_tok_s": lm["decode_tok_s"],
+             "rounds": gw.report()["rounds"]}),
+        Row("gateway_mix", {**keys, "phase": "interference"},
+            factor, "x", {"bound": INTERFERENCE_BOUND}),
+    ]
+
+
+def main(full: bool = False):
+    emit(run(full), "gateway_mix")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

@@ -21,6 +21,7 @@ from . import (
     fig10_iep,
     fig11_model_accuracy,
     fig12_scaling,
+    gateway_mix,
     kernel_intersect,
     query_throughput,
     tab2_restrictions,
@@ -38,6 +39,7 @@ BENCHES = {
     "tab3": tab3_overhead.main,      # preprocessing overhead
     "kernel": kernel_intersect.main, # Pallas intersection kernel
     "query": query_throughput.main,  # serve path: cold vs warm queries/s
+    "gateway": gateway_mix.main,     # mixed graph+LM: coalescing/interference
 }
 
 

@@ -1,21 +1,37 @@
-"""Serve a small model with batched requests (prefill + decode loop).
+"""Serve a small model with the resumable LMSession API.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Uses the production serving path (make_prefill/make_decode — the same
-functions the 256-chip dry-run lowers) on a reduced MoE config, so the
-expert-parallel decode path is exercised on CPU.
+Uses the production serving path (LMSession over make_prefill /
+make_decode — the same functions the 256-chip dry-run lowers) on a
+reduced MoE config, so the expert-parallel decode path is exercised on
+CPU.  The session is the unit the serving Gateway schedules: decode
+runs in explicit step batches, so graph-query rounds can interleave
+(see `python -m repro.launch.gateway`), and `start(resume=True)` picks
+a preempted generation back up from its last checkpoint.
 """
 import sys
 
-from repro.launch.serve import main as serve_main
+from repro.serve.session import LMSession
 
 
 def main():
-    return serve_main([
-        "--arch", "granite-moe-1b-a400m", "--smoke",
-        "--batch", "4", "--prompt-len", "32", "--gen", "16",
-    ])
+    session = LMSession(
+        "granite-moe-1b-a400m", smoke=True,
+        batch=4, prompt_len=32, gen=16,
+    )
+    session.start()
+    m = session.metrics()
+    print(f"prefill: {session.B}x{session.S} tokens "
+          f"in {m['prefill_seconds']:.3f}s")
+    while session.remaining:
+        session.decode_steps(4)        # the Gateway's step granularity
+        print(f"decoded {session.step_i}/{session.gen} steps")
+    m = session.metrics()
+    print(f"decode: {m['decode_tok_s']:.1f} tok/s "
+          f"({m['ms_per_step']:.1f} ms/step)")
+    print(f"sample tokens[0,:8] = {session.tokens_out()[0, :8].tolist()}")
+    return 0
 
 
 if __name__ == "__main__":

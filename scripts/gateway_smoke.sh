@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Gateway smoke (ISSUE 5 acceptance), CPU, seconds-scale:
+#   1. replay one request trace through the legacy single-tenant path
+#      (launch/query_serve.py, sequential rounds) and through the
+#      Gateway (launch/gateway.py) co-scheduled with a live LM decode
+#      workload — the per-query counts must be IDENTICAL (the gateway
+#      changes scheduling, never results);
+#   2. the gateway run must coalesce the trace's duplicate triangle
+#      queries (--expect-coalesced) and finish its LM steps.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+cat > "$tmp/trace.jsonl" <<'EOF'
+{"pattern": "triangle"}
+{"pattern": "P1"}
+{"pattern": {"n": 3, "edges": [[2, 1], [0, 2], [1, 0]]}}
+{"pattern": "triangle"}
+EOF
+
+echo "== legacy path (query_serve, sequential rounds) =="
+python -m repro.launch.query_serve --dataset tiny-er \
+  --requests "$tmp/trace.jsonl" --capacity 8192 --single-device \
+  --expect-min-hits 2 | tee "$tmp/legacy.log"
+
+echo "== gateway path (co-scheduled with LM decode) =="
+python -m repro.launch.gateway --dataset tiny-er \
+  --requests "$tmp/trace.jsonl" --capacity 8192 --single-device \
+  --graph-quantum 4 --expect-coalesced 2 \
+  --arch qwen3-1.7b --batch 2 --prompt-len 16 --gen 4 --lm-quantum 2 \
+  | tee "$tmp/gateway.log"
+
+grep -o 'count=[0-9]*' "$tmp/legacy.log"  > "$tmp/legacy.counts"
+grep -o 'count=[0-9]*' "$tmp/gateway.log" > "$tmp/gateway.counts"
+if ! cmp -s "$tmp/legacy.counts" "$tmp/gateway.counts"; then
+  echo "gateway_smoke FAILED: per-query counts differ between the" >&2
+  echo "legacy path and the gateway path:" >&2
+  diff "$tmp/legacy.counts" "$tmp/gateway.counts" >&2 || true
+  exit 1
+fi
+echo "gateway_smoke OK: $(wc -l < "$tmp/legacy.counts") counts identical
+across legacy and gateway paths"

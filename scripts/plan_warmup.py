@@ -64,8 +64,10 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     for name, mode, use_iep in combos:
-        res = engine.submit(QueryRequest(
+        ticket = engine.enqueue(QueryRequest(
             get_pattern(name), mode=mode, use_iep=use_iep))
+        engine.run_pending()
+        res = ticket.result
         how = ("warm" if res.cache_hit else
                "persisted" if res.search_seconds == 0.0 else "compiled")
         print(f"[warmup] {name:<6} mode={mode:<10} iep={int(use_iep)} "

@@ -14,4 +14,5 @@ else
   python -m pytest -x -q "$@"
 fi
 scripts/query_smoke.sh
+scripts/gateway_smoke.sh
 scripts/docs_check.sh

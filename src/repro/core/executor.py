@@ -108,25 +108,46 @@ class ExecutorConfig:
                 f"buckets={buckets}")
 
 
-def auto_buckets(graph, *, small: int = 128, mid: int = 1024):
+def auto_buckets(graph, *, small: int = 128, mid: int = 1024,
+                 stats: GraphStats | None = None):
     """Degree buckets from the graph's degree distribution.
 
-    Fractions are sized ~4× above the empirical row shares so bucket
-    overflow (→ capacity escalation) is rare."""
+    Legacy layout (`stats=None`): fractions are sized ~4× above the
+    empirical vertex-count shares so bucket overflow (→ capacity
+    escalation) is rare — a blanket margin that over-allocates the tail
+    buckets on most graphs.
+
+    Model layout (`stats=GraphStats`): fractions come from the perf
+    model's *predicted frontier occupancy*
+    (`perf_model.predicted_frontier_occupancy`) — the edge-weighted
+    share of rows whose base lands above each width threshold, times
+    the model's clustering amplification (p2/p1, clamped).  Both
+    layouts share the 1/64 floor and run the identical expansion core;
+    the flag only moves capacity between buckets, never correctness
+    (any layout counts exactly — tests/test_executor_buckets.py)."""
     W = max(graph.max_degree, 1)
     if W <= small:
         return None
     deg = graph.degrees
-    n = max(len(deg), 1)
+
+    if stats is not None:
+        from .perf_model import predicted_frontier_occupancy
+
+        def frac(lo: int) -> float:
+            return min(1.0, max(
+                predicted_frontier_occupancy(stats, deg, lo), 1 / 64))
+    else:
+        n = max(len(deg), 1)
+
+        def frac(lo: int) -> float:
+            return min(1.0, max(4.0 * float((deg > lo).sum()) / n, 1 / 64))
+
     out = [(small, 1.0)]
     if W > mid:
-        frac_mid = min(1.0, max(4.0 * float((deg > small).sum()) / n, 1 / 64))
-        out.append((mid, frac_mid))
-        frac_big = min(1.0, max(4.0 * float((deg > mid).sum()) / n, 1 / 64))
-        out.append((W, frac_big))
+        out.append((mid, frac(small)))
+        out.append((W, frac(mid)))
     else:
-        frac_big = min(1.0, max(4.0 * float((deg > small).sum()) / n, 1 / 64))
-        out.append((W, frac_big))
+        out.append((W, frac(small)))
     return tuple(out)
 
 

@@ -54,6 +54,31 @@ class GraphStats:
         return 2.0 * self.n_edges / max(self.n_vertices, 1)
 
 
+def predicted_frontier_occupancy(
+    stats: GraphStats, degrees, threshold: int
+) -> float:
+    """Predicted fraction of frontier rows whose base degree > threshold.
+
+    Bucket sizing input for `executor.auto_buckets(stats=...)`.  At any
+    loop depth ≥ 1 a frontier row binds its base vertex by traversing an
+    edge into it, so under the model's uniform-traversal assumption
+    P(base = v) ∝ deg(v): the occupancy of the degree range above
+    `threshold` is its EDGE-weighted share, not the vertex-count share
+    the 4×-margin heuristic padded.  Clustering concentrates frontiers
+    on the head further — restriction-surviving rows preferentially sit
+    inside closed wedges — which the model bounds with the p2/p1 ratio
+    (how much likelier two neighbors of a common vertex are adjacent
+    than a random pair), clamped to [1, 4] so pathological triangle
+    counts cannot blow the layout up past the legacy margin."""
+    deg = np.asarray(degrees, dtype=np.int64)
+    total = float(deg.sum())
+    if total <= 0:
+        return 0.0
+    share = float(deg[deg > threshold].sum()) / total
+    amp = 1.0 if stats.p1 <= 0 else min(max(stats.p2 / stats.p1, 1.0), 4.0)
+    return min(share * amp, 1.0)
+
+
 def intersection_cardinality(stats: GraphStats, m: int) -> float:
     """Expected |N(v1) ∩ ... ∩ N(vm)|;  m=0 means the full vertex set."""
     if m == 0:

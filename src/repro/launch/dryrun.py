@@ -120,7 +120,9 @@ def lower_graphpi(mesh, mesh_name: str, *, buckets: bool | None = None):
 
     `buckets` toggles the degree-bucketed expansion (§Perf): None reads
     REPRO_GRAPHPI_BUCKETS (default on; set 0 for the paper-faithful
-    single-window baseline)."""
+    single-window baseline).  REPRO_GRAPHPI_MODEL_BUCKETS=1 sizes the
+    bucket fractions from the perf model's predicted frontier occupancy
+    instead of the legacy 4×-margin heuristic."""
     from ..core.config_search import search_configuration
     from ..core.executor import (
         ExecutorConfig, _bs_iters, _make_count_fn, device_graph,
@@ -137,9 +139,11 @@ def lower_graphpi(mesh, mesh_name: str, *, buckets: bool | None = None):
     stats = GraphStats(g.n, g.m, tri_cnt=max(g.m, 1))  # plan-time proxy
     res = search_configuration(house(), stats, use_iep=True)
     plan = res.plan(house())
+    model_buckets = os.environ.get("REPRO_GRAPHPI_MODEL_BUCKETS", "0") == "1"
     cfg = ExecutorConfig(
         capacity=1 << 15,
-        degree_buckets=auto_buckets(g) if buckets else None,
+        degree_buckets=auto_buckets(
+            g, stats=stats if model_buckets else None) if buckets else None,
     )
     W = max(g.max_degree, 1)
     count_fn = _make_count_fn(plan, W, _bs_iters(W), cfg)

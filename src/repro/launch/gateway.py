@@ -1,0 +1,207 @@
+"""The unified serving front door: graph queries + LM decode, one mesh.
+
+    PYTHONPATH=src python -m repro.launch.gateway --dataset tiny-er \
+        --workload smoke --arch qwen3-1.7b --gen 8 --batch 2 \
+        --prompt-len 16 --graph-quantum 4 --lm-quantum 2
+
+Builds ONE Gateway that owns the process mesh and co-schedules two
+tenants on it: a `GraphQueryWorkload` (the pattern-query engine's
+ticket queue — same request format and synthetic workloads as
+`launch/query_serve.py`, and bit-identical counts: only the scheduling
+differs) and an `LMDecodeWorkload` (`LMSession`, resumable).  The round
+scheduler interleaves them under the per-workload Share policy
+(quantum/weight/priority); same-isomorphism-class graph queries that
+land in one round coalesce into a single plan execution.
+
+`--no-lm` serves graph traffic only (the trace-identity configuration:
+a request file replayed here and through `launch/query_serve.py` must
+produce identical counts per query).  `--model-buckets` sizes the
+executor's degree buckets from the perf model's predicted frontier
+occupancy instead of the legacy 4×-margin heuristic.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    # ---- graph-query tenant
+    ap.add_argument("--dataset", default="tiny-er")
+    ap.add_argument("--requests", default="",
+                    help="JSON-lines request file (overrides --workload)")
+    ap.add_argument("--workload", default="mixed",
+                    choices=["mixed", "smoke"])
+    ap.add_argument("--repeat", type=int, default=1)
+    ap.add_argument("--use-iep", action="store_true")
+    ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--capacity", type=int, default=1 << 15)
+    ap.add_argument("--chunk", type=int, default=0)
+    ap.add_argument("--max-entries", type=int, default=256)
+    ap.add_argument("--cache-dir", default="",
+                    help="persistent plan store (DESIGN.md §5)")
+    ap.add_argument("--warm-from-disk", action="store_true")
+    ap.add_argument("--model-buckets", action="store_true",
+                    help="size degree buckets from the perf model's "
+                         "predicted frontier occupancy (default: legacy "
+                         "4x-margin heuristic)")
+    ap.add_argument("--graph-quantum", type=int, default=4,
+                    help="graph tickets per scheduler turn (duplicates "
+                         "within a turn coalesce)")
+    ap.add_argument("--expect-min-hits", type=int, default=-1)
+    ap.add_argument("--expect-coalesced", type=int, default=-1,
+                    help="fail unless >= this many tickets coalesced")
+    # ---- LM tenant
+    ap.add_argument("--no-lm", action="store_true",
+                    help="graph-only (trace-identity mode)")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--full-lm", action="store_true",
+                    help="full config instead of the CPU smoke variant")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--lm-quantum", type=int, default=2,
+                    help="decode steps per scheduler turn")
+    ap.add_argument("--lm-weight", type=int, default=1,
+                    help="LM turns per round (fair-share weight)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    # ---- shared
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--single-device", action="store_true",
+                    help="graph engine off the mesh (LM still uses it)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from ..configs.graphpi import get_dataset, get_pattern
+    from ..core.executor import ExecutorConfig, auto_buckets, compute_stats
+    from ..launch.mesh import shared_host_mesh
+    from ..launch.query_serve import build_requests
+    from ..query import PlanCache, PlanStore, QueryEngine, canonical_key
+    from ..serve.gateway import (
+        Gateway, GraphQueryWorkload, LMDecodeWorkload, Share,
+    )
+    from ..serve.session import LMSession
+
+    if args.warm_from_disk and not args.cache_dir:
+        print("[gateway] --warm-from-disk requires --cache-dir")
+        return 2
+    if args.resume and not args.ckpt_dir:
+        print("[gateway] --resume requires --ckpt-dir")
+        return 2
+
+    mesh = shared_host_mesh(model=args.model_axis)
+    graph = get_dataset(args.dataset)
+    graph_mesh = None
+    if not args.single_device and len(jax.devices()) > 1:
+        graph_mesh = mesh
+
+    cfg = ExecutorConfig(capacity=args.capacity)
+    stats = None
+    if args.model_buckets:
+        stats = compute_stats(graph, cfg)
+        from dataclasses import replace
+
+        cfg = replace(cfg, degree_buckets=auto_buckets(graph, stats=stats))
+    store = PlanStore(args.cache_dir) if args.cache_dir else None
+    engine = QueryEngine(
+        graph, cfg=cfg, mesh=graph_mesh, chunk=args.chunk or None,
+        cache=PlanCache(max_entries=args.max_entries or None, store=store),
+        stats=stats,
+    )
+    print(f"[gateway] graph={graph.name} (|V|={graph.n}, |E|={graph.m}) "
+          f"resident on {engine.summary()['devices']} device(s)"
+          f"{'; model buckets ' + repr(cfg.degree_buckets) if args.model_buckets else ''}")
+    if args.warm_from_disk:
+        n = engine.warm_from_disk()
+        print(f"[gateway] warm-from-disk: {n} plan(s) preloaded")
+
+    requests = build_requests(args, get_pattern)
+    distinct = len({canonical_key(r.pattern) for r in requests})
+    print(f"[gateway] {len(requests)} graph requests "
+          f"({distinct} distinct isomorphism classes)")
+
+    gw = Gateway(mesh=mesh)
+    graph_wl = gw.add(GraphQueryWorkload(engine, requests),
+                      Share(quantum=max(args.graph_quantum, 1)))
+    if not args.no_lm:
+        session = LMSession(
+            args.arch, smoke=not args.full_lm, batch=args.batch,
+            prompt_len=args.prompt_len, gen=args.gen, mesh=mesh,
+            seed=args.seed, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+        )
+        gw.add(LMDecodeWorkload(session, resume=args.resume),
+               Share(quantum=max(args.lm_quantum, 1),
+                     weight=max(args.lm_weight, 1)))
+        print(f"[gateway] lm={args.arch} "
+              f"({'smoke' if not args.full_lm else 'full'}): "
+              f"{args.batch}x{args.prompt_len} prompt, {args.gen} steps")
+
+    gw.run()
+
+    results = graph_wl.results()
+    for r in results:
+        print("[gateway]", r.line())
+
+    rep = gw.report()
+    names = [t.name for t in gw.trace.turns]
+    print(f"[gateway] {rep['rounds']} rounds, interleaving: "
+          f"{' '.join(names[:24])}{' ...' if len(names) > 24 else ''}")
+    s = engine.summary()
+    print(f"[gateway] graph: {s['requests_resolved']} requests, "
+          f"{s['executions']} executions, {s['coalesced']} coalesced; "
+          f"p50={s['latency']['p50_ms']:.1f}ms "
+          f"p99={s['latency']['p99_ms']:.1f}ms; "
+          f"cache {s['cache']['hits']} hits / {s['cache']['misses']} misses")
+    # interference evidence: per-item turn latency split solo vs
+    # contended, for every workload that has either bin (a tenant the
+    # other side outlasts is 100% contended — still worth printing; the
+    # solo baseline then comes from benchmarks/gateway_mix.py's
+    # dedicated solo phase)
+    for name, wr in rep["workloads"].items():
+        tm = wr["turn_item_ms"]
+        parts = [f"{bin_} {tm[bin_]['p50_ms']:.1f}ms (n={tm[bin_]['n']})"
+                 for bin_ in ("solo", "contended") if tm[bin_]["n"]]
+        if not parts:
+            continue
+        x = (f"; contended/solo = {wr['interference_x']:.2f}x"
+             if "interference_x" in wr else "")
+        print(f"[gateway] {name} per-item turn p50: "
+              f"{', '.join(parts)}{x}")
+    if not args.no_lm:
+        m = rep["workloads"]["lm"]["metrics"]
+        how = (f"resumed from step {m['resumed_from']}"
+               if m["resumed_from"] is not None
+               else f"prefill {m['prefill_seconds']:.3f}s")
+        print(f"[gateway] lm: {m['steps_done']}/{m['steps_total']} steps "
+              f"({how}, {m['decode_tok_s']:.1f} tok/s, "
+              f"{m['ms_per_step']:.1f} ms/step)")
+
+    rc = 0
+    bad = [r for r in results if r.verified is False]
+    if bad:
+        print(f"[gateway] VERIFY FAILED for {[r.pattern_name for r in bad]}")
+        rc = 1
+    over = [r for r in results if r.overflowed]
+    if over:
+        print(f"[gateway] OVERFLOWED (truncated counts) for "
+              f"{[r.pattern_name for r in over]}")
+        rc = rc or 3
+    if args.expect_min_hits >= 0 and s["cache"]["hits"] < args.expect_min_hits:
+        print(f"[gateway] EXPECTED >= {args.expect_min_hits} cache hits, "
+              f"got {s['cache']['hits']}")
+        rc = rc or 2
+    if args.expect_coalesced >= 0 and s["coalesced"] < args.expect_coalesced:
+        print(f"[gateway] EXPECTED >= {args.expect_coalesced} coalesced "
+              f"tickets, got {s['coalesced']}")
+        rc = rc or 2
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

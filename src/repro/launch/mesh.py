@@ -29,6 +29,22 @@ def make_host_mesh(model: int = 1):
     )
 
 
+_SHARED_MESHES: dict[int, object] = {}
+
+
+def shared_host_mesh(model: int = 1):
+    """The process-wide mesh the serving Gateway owns.
+
+    Co-scheduled workloads (graph queries + LM decode) must share ONE
+    device pool — two independently constructed meshes over the same
+    devices would each believe they own the hardware.  This memoizes
+    `make_host_mesh` per model-axis width so every Gateway tenant in a
+    process resolves to the same Mesh object."""
+    if model not in _SHARED_MESHES:
+        _SHARED_MESHES[model] = make_host_mesh(model=model)
+    return _SHARED_MESHES[model]
+
+
 HW = {
     # TPU v5e per-chip numbers used for the roofline terms
     "peak_flops_bf16": 197e12,     # FLOP/s

@@ -20,6 +20,13 @@ plus isomorphic relabelings of each (cache hits), `smoke` is the
 2-pattern CI variant.  Per-query latency, p50/p99, and the cache
 counters (hits never re-search or re-JIT) are reported at the end.
 
+Since the Gateway landed this CLI is a thin client of it: requests are
+enqueued as tickets on a `GraphQueryWorkload` and drained by the round
+scheduler (`--round-quantum` tickets per round; same-class duplicates
+within a round coalesce into one execution).  Counts are bit-identical
+to the direct engine path — only the scheduling differs.  Mixed
+graph + LM traffic lives in `launch/gateway.py`.
+
 With `--cache-dir` the plan cache persists across restarts (searched
 configurations + AOT-compiled executables, DESIGN.md §5): a restarted
 replica replays a prior workload with zero configuration searches and
@@ -109,12 +116,17 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--expect-min-hits", type=int, default=-1,
                     help="fail unless the cache records >= this many hits")
+    ap.add_argument("--round-quantum", type=int, default=1,
+                    help="tickets per scheduler round; >1 coalesces "
+                         "same-class duplicates within a round into one "
+                         "execution")
     args = ap.parse_args(argv)
 
     from ..configs.graphpi import get_dataset, get_pattern
     from ..core.executor import ExecutorConfig
-    from ..launch.mesh import make_host_mesh
+    from ..launch.mesh import shared_host_mesh
     from ..query import PlanCache, PlanStore, QueryEngine, canonical_key
+    from ..serve.gateway import Gateway, GraphQueryWorkload, Share
 
     if args.warm_from_disk and not args.cache_dir:
         print("[serve] --warm-from-disk requires --cache-dir")
@@ -123,7 +135,7 @@ def main(argv=None):
     graph = get_dataset(args.dataset)
     mesh = None
     if not args.single_device and len(jax.devices()) > 1:
-        mesh = make_host_mesh(model=args.model_axis)
+        mesh = shared_host_mesh(model=args.model_axis)
     store = PlanStore(args.cache_dir) if args.cache_dir else None
     engine = QueryEngine(
         graph,
@@ -149,7 +161,11 @@ def main(argv=None):
     print(f"[serve] {len(requests)} requests "
           f"({distinct} distinct isomorphism classes)")
 
-    results = engine.serve(requests)
+    gw = Gateway(mesh=mesh)
+    workload = gw.add(GraphQueryWorkload(engine, requests),
+                      Share(quantum=max(args.round_quantum, 1)))
+    gw.run()
+    results = workload.results()
     for r in results:
         print("[serve]", r.line())
 
@@ -157,6 +173,9 @@ def main(argv=None):
     lat, cache = s["latency"], s["cache"]
     print(f"[serve] latency: n={lat['n']} p50={lat['p50_ms']:.1f}ms "
           f"p99={lat['p99_ms']:.1f}ms mean={lat['mean_ms']:.1f}ms")
+    print(f"[serve] rounds: {gw.report()['rounds']} "
+          f"({s['requests_resolved']} requests, {s['executions']} "
+          f"executions, {s['coalesced']} coalesced)")
     print(f"[serve] cache: {cache['hits']} hits / {cache['misses']} misses "
           f"({s['cache_entries']} entries); {cache['n_searches']} config "
           f"searches ({cache['search_seconds']:.3f}s), {cache['n_compiles']} "

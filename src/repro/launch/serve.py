@@ -3,25 +3,22 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 64 --gen 32
 
-Runs the production serving path (same make_prefill/make_decode the
-dry-run lowers) on the host mesh: prefill a batch of prompts, then decode
-`--gen` tokens greedily, reporting per-phase throughput.  With --smoke
-the reduced same-family config is used so the loop runs on CPU.
+Thin client of the serving Gateway (`repro.serve.gateway`): builds one
+`LMSession` (the reusable prefill/decode loop extracted from the old
+monolithic main) and schedules it as the Gateway's sole workload.  With
+--smoke the reduced same-family config is used so the loop runs on CPU.
+Mixed graph-query + LM traffic lives in `launch/gateway.py`.
 
-Fault tolerance hooks mirror the trainer: the decode loop checkpoints its
-cache + tokens every --ckpt-every steps (restartable serving for long
-generations — a 500k-token decode at 1000-node scale must survive
-preemption).
+Fault tolerance mirrors the trainer — and now actually round-trips: the
+decode loop checkpoints its cache + tokens every --ckpt-every steps,
+and `--resume` reloads the latest step and continues decoding
+(restartable serving for long generations — a 500k-token decode at
+1000-node scale must survive preemption).
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None):
@@ -37,104 +34,50 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest --ckpt-dir checkpoint "
+                         "(cache+tokens+step) and continue decoding")
+    ap.add_argument("--step-quantum", type=int, default=0,
+                    help="decode steps per scheduler turn (0 = all)")
     args = ap.parse_args(argv)
 
-    from ..configs import get_config, get_smoke_config, input_specs
-    from ..configs.base import ShapeConfig
-    from ..compat import set_mesh
-    from ..launch.mesh import make_host_mesh
-    from ..models import transformer as T
-    from ..serve.serve_step import make_decode, make_prefill
-    from ..train import checkpoint as ckpt
-    from ..train.train_step import abstract_params
+    from ..launch.mesh import shared_host_mesh
+    from ..serve.gateway import Gateway, LMDecodeWorkload, Share
+    from ..serve.session import LMSession
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_host_mesh(model=args.model_axis)
+    if args.resume and not args.ckpt_dir:
+        print("[serve] --resume requires --ckpt-dir")
+        return 2
+
+    mesh = shared_host_mesh(model=args.model_axis)
+    session = LMSession(
+        args.arch, smoke=args.smoke, batch=args.batch,
+        prompt_len=args.prompt_len, gen=args.gen, max_seq=args.max_seq,
+        mesh=mesh, seed=args.seed,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    gw = Gateway(mesh=mesh)
+    gw.add(LMDecodeWorkload(session, resume=args.resume),
+           Share(quantum=args.step_quantum or args.gen))
+    gw.run()
+
+    m = session.metrics()
     B, S = args.batch, args.prompt_len
-    max_seq = args.max_seq or (S + args.gen)
-
-    key = jax.random.PRNGKey(args.seed)
-    with set_mesh(mesh):
-        params = jax.jit(lambda k: T.init(cfg, k))(key)
-
-        # ---- prefill --------------------------------------------------------
-        shape = ShapeConfig("serve", S, B, "prefill")
-        batch = _fake_prompts(cfg, B, S, key)
-        prefill, p_sh, b_sh = make_prefill(cfg, mesh, input_specs(cfg, shape),
-                                           q_chunk=0)
-        t0 = time.perf_counter()
-        logits, prefill_cache = jax.block_until_ready(prefill(params, batch))
-        t_prefill = time.perf_counter() - t0
-        print(f"[serve] prefill: {B}×{S} tokens in {t_prefill:.3f}s "
-              f"({B * S / t_prefill:.0f} tok/s)  logits={logits.shape}")
-
-        # ---- decode ---------------------------------------------------------
-        decode, _, c_sh, cache_shape = make_decode(
-            cfg, mesh, batch=B, max_seq=max_seq
-        )
-        cache = jax.jit(
-            lambda: T.init_cache(cfg, B, max_seq), out_shardings=c_sh
-        )()
-        cache = _seed_cache(cache, prefill_cache, S)
-        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        generated = [np.asarray(tokens)]
-        t0 = time.perf_counter()
-        for i in range(args.gen):
-            pos = jnp.asarray(S + i, jnp.int32)
-            logits, cache = decode(params, tokens, cache, pos)
-            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-            generated.append(np.asarray(tokens))
-            if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
-                ckpt.save(args.ckpt_dir, i + 1,
-                          {"cache": cache, "tokens": tokens})
-        jax.block_until_ready(tokens)
-        t_dec = time.perf_counter() - t0
-        print(f"[serve] decode: {args.gen} steps × {B} seqs in {t_dec:.3f}s "
-              f"({args.gen * B / t_dec:.1f} tok/s, "
-              f"{1e3 * t_dec / args.gen:.1f} ms/step)")
-        out = np.concatenate(generated, axis=1)
-        print(f"[serve] sample tokens[0,:16] = {out[0, :16].tolist()}")
+    if session.resumed_from is not None:
+        print(f"[serve] resumed from checkpoint step {session.resumed_from} "
+              f"(skipped prefill; {m['steps_total'] - session.resumed_from} "
+              f"steps remained)")
+    else:
+        tp = B * S / m["prefill_seconds"] if m["prefill_seconds"] else 0.0
+        print(f"[serve] prefill: {B}×{S} tokens in "
+              f"{m['prefill_seconds']:.3f}s ({tp:.0f} tok/s)")
+    steps = m["steps_done"] - (session.resumed_from or 0)
+    print(f"[serve] decode: {steps} steps × {B} seqs in "
+          f"{m['decode_seconds']:.3f}s ({m['decode_tok_s']:.1f} tok/s, "
+          f"{m['ms_per_step']:.1f} ms/step)")
+    out = session.tokens_out()
+    print(f"[serve] sample tokens[0,:16] = {out[0, :16].tolist()}")
     return 0
-
-
-def _fake_prompts(cfg, B, S, key):
-    if cfg.stub_frontend and cfg.family == "vlm":
-        return {
-            "embeds": jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16),
-            "positions3": jnp.broadcast_to(
-                jnp.arange(S, dtype=jnp.int32), (B, 3, S)
-            ),
-        }
-    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)}
-    if cfg.family == "encdec":
-        batch["enc_embeds"] = jax.random.normal(
-            key, (B, S, cfg.d_model), jnp.bfloat16
-        )
-    return batch
-
-
-def _seed_cache(cache, prefill_cache, S):
-    """Copy prefill K/V (length S) into the front of the decode cache."""
-    import jax
-
-    def put(dst, src):
-        if dst.ndim >= 2 and src.ndim == dst.ndim and src.shape != dst.shape:
-            # K/V: [..., S, K, hd] into [..., max_seq, K, hd]
-            ax = next(
-                i for i in range(dst.ndim) if src.shape[i] != dst.shape[i]
-            )
-            idx = [slice(None)] * dst.ndim
-            idx[ax] = slice(0, src.shape[ax])
-            return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype) if src.shape == dst.shape else dst
-
-    if "blocks" in prefill_cache:
-        new_blocks = jax.tree.map(put, cache["blocks"], prefill_cache["blocks"])
-        cache = {**cache, "blocks": new_blocks}
-    if "cross_kv" in prefill_cache:
-        cache = {**cache, "cross_kv": put(cache["cross_kv"],
-                                          prefill_cache["cross_kv"])}
-    return cache
 
 
 if __name__ == "__main__":

@@ -4,17 +4,21 @@
 # engine over a resident graph (engine).
 from .canon import canonical_form, canonical_key, relabeled_variant
 from .cache import CacheEntry, PlanCache
-from .engine import QueryEngine, QueryRequest, QueryResult
+from .engine import (
+    PlannedQuery, QueryEngine, QueryRequest, QueryResult, Ticket,
+)
 from .store import PlanStore, StoreRecord
 
 __all__ = [
     "CacheEntry",
     "PlanCache",
     "PlanStore",
+    "PlannedQuery",
     "QueryEngine",
     "QueryRequest",
     "QueryResult",
     "StoreRecord",
+    "Ticket",
     "canonical_form",
     "canonical_key",
     "relabeled_variant",

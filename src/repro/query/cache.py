@@ -97,6 +97,8 @@ class CacheEntry:
     search_seconds: float
     compile_seconds: float
     hits: int = 0
+    executions: int = 0         # count() dispatches (coalescing evidence:
+                                # N same-class tickets in one round → +1)
 
     def count(self, *, chunk: int | None = None) -> CountResult:
         """Execute the cached program.  `chunk` stripes the outer vertex

@@ -7,13 +7,31 @@ devices the graph stays resident on the mesh with the executor's
 fine-grained outer-loop striping (`ShardedMatcher`).  Requests then
 stream through the `PlanCache`: the first query of an isomorphism
 class pays configuration search + JIT, repeats replay the warmed
-program.  Per-query wall latency is recorded; `summary()` reports
-p50/p99 plus the cache counters that prove hits never re-search or
-re-compile.
+program.
+
+Request surface (DESIGN.md §5).  The engine is asynchronous-by-default
+so the serving Gateway can schedule it against other mesh tenants:
+
+  * ``plan(request)``    — cache/plan resolution only (search + JIT on
+                           a miss); never executes a count.
+  * ``enqueue(request)`` — admit a request, returning a :class:`Ticket`
+                           that resolves later.
+  * ``run_pending(limit)`` — execute up to ``limit`` queued tickets as
+                           one round, COALESCING tickets of the same
+                           isomorphism class (× mode × use_iep) into a
+                           single plan execution: N bursty duplicates
+                           cost one kernel dispatch, and the N−1
+                           riders are accounted as cache hits.
+
+``submit()``/``serve()`` remain as deprecated synchronous shims (one
+request per round — the exact pre-Gateway behaviour).  Per-query wall
+latency is recorded; `summary()` reports p50/p99 plus the cache
+counters that prove hits never re-search or re-compile.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -22,7 +40,8 @@ from ..core.executor import ExecutorConfig, compute_stats, device_graph
 from ..core.pattern import Pattern
 from ..core.perf_model import GraphStats
 from ..graph.csr import GraphCSR
-from .cache import DEFAULT_MAX_ENTRIES, PlanCache
+from .cache import DEFAULT_MAX_ENTRIES, CacheEntry, PlanCache
+from .canon import canonical_key
 
 
 @dataclass(frozen=True)
@@ -53,17 +72,52 @@ class QueryResult:
     max_needed: int
     expected: int | None = None   # oracle count when verified
     verified: bool | None = None  # None = not requested
+    coalesced: bool = False       # resolved by another ticket's execution
 
     def line(self) -> str:
         """One human-readable serving-log line."""
         v = ("" if self.verified is None
              else ("  verify=OK" if self.verified else "  verify=MISMATCH"))
         o = "  OVERFLOWED" if self.overflowed else ""
+        how = "HIT " if self.cache_hit else "MISS"
+        if self.coalesced:
+            how = "COAL"
         return (f"{self.pattern_name:<16} count={self.count:<12} "
-                f"{'HIT ' if self.cache_hit else 'MISS'} "
+                f"{how} "
                 f"lat={self.latency_s * 1e3:8.1f}ms "
                 f"(search={self.search_seconds:.3f}s "
                 f"compile={self.compile_seconds:.3f}s){v}{o}")
+
+
+@dataclass(frozen=True)
+class PlannedQuery:
+    """What ``plan()`` resolves: the warmed cache entry plus whether the
+    resolution was a cache hit (misses paid search/JIT just now)."""
+
+    entry: CacheEntry
+    cache_hit: bool
+
+
+@dataclass
+class Ticket:
+    """Handle for an enqueued request; resolves when a round executes it
+    (``QueryEngine.run_pending`` or the Gateway's graph workload)."""
+
+    request: QueryRequest
+    seq: int
+    _result: QueryResult | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    @property
+    def result(self) -> QueryResult:
+        if self._result is None:
+            raise RuntimeError(
+                f"ticket #{self.seq} not resolved yet — run the engine's "
+                f"pending queue (run_pending) or schedule it via the Gateway")
+        return self._result
 
 
 class QueryEngine:
@@ -105,53 +159,158 @@ class QueryEngine:
         self._latencies: list[float] = []
         self._edges = None                     # lazy, for oracle verification
         self._oracle: dict[str, int] = {}      # canon_key -> oracle count
+        self._pending: list[Ticket] = []
+        self._seq = 0
+        # round-execution counters (the coalescing evidence)
+        self.requests_resolved = 0
+        self.executions = 0                    # entry.count() dispatches
+        self.coalesced = 0                     # tickets riding an execution
 
-    # ------------------------------------------------------------- serving
-    def submit(self, request: QueryRequest) -> QueryResult:
-        t0 = time.perf_counter()
+    # ------------------------------------------------------ async serving
+    def plan(self, request: QueryRequest) -> PlannedQuery:
+        """Cache/plan resolution ONLY — search + plan build + JIT warmup
+        on a miss, pure lookup on a hit.  Never executes a count."""
         entry, hit = self.cache.get_or_build(
             request.pattern, self.graph, self.stats,
             cfg=self.cfg, mesh=self.mesh, axis=self.axis,
             mode=request.mode, use_iep=request.use_iep,
             chunk=self.chunk, arrays=self._arrays,
         )
+        return PlannedQuery(entry=entry, cache_hit=hit)
+
+    def enqueue(self, request: QueryRequest) -> Ticket:
+        """Admit a request; the returned ticket resolves when a round
+        executes it (:meth:`run_pending`, or the Gateway's scheduler)."""
+        ticket = Ticket(request=request, seq=self._seq)
+        self._seq += 1
+        self._pending.append(ticket)
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @staticmethod
+    def _group_key(request: QueryRequest) -> tuple:
+        # mirrors PlanCache.entry_key normalization: naive ignores
+        # use_iep, so the flag must not split one round group either
+        use_iep = bool(request.use_iep) and request.mode != "naive"
+        return (canonical_key(request.pattern), request.mode, use_iep)
+
+    def run_pending(self, limit: int | None = None) -> list[Ticket]:
+        """Execute up to ``limit`` queued tickets as ONE round.
+
+        Tickets whose requests fall in the same isomorphism class (and
+        mode/use_iep) are coalesced: the class is planned and executed
+        once, and every rider ticket resolves with that count — riders
+        are accounted as cache hits (they never search, compile, or
+        dispatch).  Distinct classes in the round are micro-batched
+        back-to-back against the warmed resident graph.  Returns the
+        resolved tickets in admission order.
+        """
+        if limit is not None and limit < 0:
+            # a negative slice would silently drop the newest tickets
+            raise ValueError(f"limit must be >= 0, got {limit}")
+        take = self._pending if limit is None else self._pending[:limit]
+        take = list(take)
+        del self._pending[:len(take)]
+        if not take:
+            return []
+        groups: dict[tuple, list[Ticket]] = {}
+        for t in take:
+            groups.setdefault(self._group_key(t.request), []).append(t)
+        for tickets in groups.values():
+            self._execute_group(tickets)
+        return take
+
+    def _execute_group(self, tickets: list[Ticket]) -> None:
+        t0 = time.perf_counter()
+        lead = tickets[0].request
+        planned = self.plan(lead)
+        entry, hit = planned.entry, planned.cache_hit
         out = entry.count(chunk=self.chunk)
+        entry.executions += 1
+        self.executions += 1
         latency = time.perf_counter() - t0
-        self._latencies.append(latency)
 
-        expected = verified = None
-        if request.verify:
-            # oracle counts are isomorphism-invariant — memoize per class
-            if entry.canon_key not in self._oracle:
-                from ..core.oracle import count_embeddings_oracle
+        expected = None
+        if any(t.request.verify for t in tickets):
+            expected = self._oracle_count(entry.canon_key, lead.pattern)
+        for j, t in enumerate(tickets):
+            self._latencies.append(latency)
+            self.requests_resolved += 1
+            if j > 0:
+                # a coalesced rider is a logical cache hit: it was served
+                # without a search, a compile, or its own dispatch
+                self.cache.stats.hits += 1
+                entry.hits += 1
+                self.coalesced += 1
+            verified = (expected == out.count
+                        if t.request.verify and expected is not None else None)
+            t._result = QueryResult(
+                pattern_name=t.request.pattern.name or "anon",
+                canon_key=entry.canon_key,
+                count=out.count,
+                latency_s=latency,
+                cache_hit=hit if j == 0 else True,
+                mode=t.request.mode,
+                use_iep=t.request.use_iep,
+                order=entry.config.order,
+                res_set=entry.plan.res_set,
+                iep_k=entry.config.iep_k,
+                search_seconds=0.0 if (hit or j > 0) else entry.search_seconds,
+                compile_seconds=0.0 if (hit or j > 0)
+                else entry.compile_seconds,
+                overflowed=out.overflowed,
+                max_needed=out.max_needed,
+                expected=expected if t.request.verify else None,
+                verified=verified,
+                coalesced=j > 0,
+            )
 
-                if self._edges is None:
-                    self._edges = self.graph.edge_array()
-                self._oracle[entry.canon_key] = count_embeddings_oracle(
-                    self.graph.n, self._edges, request.pattern)
-            expected = self._oracle[entry.canon_key]
-            verified = expected == out.count
-        return QueryResult(
-            pattern_name=request.pattern.name or "anon",
-            canon_key=entry.canon_key,
-            count=out.count,
-            latency_s=latency,
-            cache_hit=hit,
-            mode=request.mode,
-            use_iep=request.use_iep,
-            order=entry.config.order,
-            res_set=entry.plan.res_set,
-            iep_k=entry.config.iep_k,
-            search_seconds=0.0 if hit else entry.search_seconds,
-            compile_seconds=0.0 if hit else entry.compile_seconds,
-            overflowed=out.overflowed,
-            max_needed=out.max_needed,
-            expected=expected,
-            verified=verified,
-        )
+    def _oracle_count(self, canon_key: str, pattern: Pattern) -> int:
+        # oracle counts are isomorphism-invariant — memoize per class
+        if canon_key not in self._oracle:
+            from ..core.oracle import count_embeddings_oracle
+
+            if self._edges is None:
+                self._edges = self.graph.edge_array()
+            self._oracle[canon_key] = count_embeddings_oracle(
+                self.graph.n, self._edges, pattern)
+        return self._oracle[canon_key]
+
+    # ------------------------------------------- deprecated sync serving
+    def submit(self, request: QueryRequest) -> QueryResult:
+        """Deprecated synchronous path: one request, one round.
+
+        Thin wrapper over :meth:`enqueue` + :meth:`run_pending(limit=1)`
+        — bit-identical counts and identical cache accounting to the
+        pre-Gateway implementation (no coalescing at round size 1)."""
+        warnings.warn(
+            "QueryEngine.submit() is deprecated; use plan()/enqueue() with "
+            "run_pending(), or schedule the engine through "
+            "repro.serve.gateway.Gateway",
+            DeprecationWarning, stacklevel=2)
+        ticket = self.enqueue(request)
+        # the queue is FIFO: earlier enqueue()d tickets (if any) resolve
+        # first, one per round, until ours does
+        while not ticket.done and self.pending():
+            self.run_pending(limit=1)
+        return ticket.result
 
     def serve(self, requests) -> list[QueryResult]:
-        return [self.submit(r) for r in requests]
+        """Deprecated synchronous path: each request is its own round
+        (sequential, no coalescing — the pre-Gateway behaviour)."""
+        warnings.warn(
+            "QueryEngine.serve() is deprecated; enqueue() tickets and "
+            "schedule them via repro.serve.gateway.Gateway",
+            DeprecationWarning, stacklevel=2)
+        out = []
+        for r in requests:
+            ticket = self.enqueue(r)
+            while not ticket.done and self.pending():
+                self.run_pending(limit=1)
+            out.append(ticket.result)
+        return out
 
     def warm_from_disk(self) -> int:
         """Preload every persisted plan compatible with this engine's
@@ -188,6 +347,9 @@ class QueryEngine:
             "latency": self.latency_percentiles(),
             "cache": self.cache.stats.as_dict(),
             "cache_entries": len(self.cache),
+            "requests_resolved": self.requests_resolved,
+            "executions": self.executions,
+            "coalesced": self.coalesced,
         }
         if self.cache.store is not None:
             out["store"] = self.cache.store.stats.as_dict()

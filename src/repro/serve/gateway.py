@@ -1,0 +1,212 @@
+"""The serving front door: one Gateway, one mesh, many workloads.
+
+GraphPi's end state is a serving system — the plan search and the
+asymmetric restrictions only pay off amortized across request streams,
+and the LM stack already shares the repo's mesh machinery.  The Gateway
+is the single object that owns the process's devices and co-schedules
+heterogeneous tenants on them:
+
+    gw = Gateway(mesh=mesh)
+    graph = gw.add(GraphQueryWorkload(engine, requests),
+                   Share(quantum=4))
+    lm = gw.add(LMDecodeWorkload(LMSession("qwen3-1.7b", smoke=True)),
+                Share(quantum=2, weight=2))
+    gw.run()
+    print(gw.report())
+
+Workloads implement the `Workload` protocol (scheduler.py): warmup(),
+ready(), step(quantum), metrics().  The two shipped implementations:
+
+  * `GraphQueryWorkload` — wraps a `QueryEngine`'s ticket queue; each
+    step executes one coalescing round (`run_pending`): same-class
+    duplicate queries in the round cost ONE kernel dispatch, distinct
+    classes micro-batch back-to-back on the warmed resident graph.
+  * `LMDecodeWorkload` — wraps an `LMSession`; each step runs `quantum`
+    greedy decode steps (resumable via the session's checkpoints).
+
+The gateway's report includes, per workload, the scheduler-level turn
+latencies split into *solo* (no other workload was ready that round)
+vs *contended* (another tenant was hot) — the interference evidence the
+mixed-traffic benchmark (`benchmarks/gateway_mix.py`) asserts on.
+
+Every launcher is a thin client of this module: `launch/gateway.py`
+runs mixed traffic, `launch/query_serve.py` schedules a single graph
+workload (bit-identical counts to direct engine rounds — only the
+scheduling differs), and `launch/serve.py` schedules a single LM
+workload.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .scheduler import RoundScheduler, Share, StepReport, Workload
+
+__all__ = [
+    "Gateway",
+    "GraphQueryWorkload",
+    "LMDecodeWorkload",
+    "RoundScheduler",
+    "Share",
+    "StepReport",
+    "Workload",
+]
+
+
+class GraphQueryWorkload:
+    """Pattern-query tenant: a `QueryEngine` ticket queue as a Workload.
+
+    `prewarm=True` resolves every distinct isomorphism class in the
+    initial queue during warmup() (search + JIT, no counting), so
+    scheduled rounds measure steady-state execution — benchmarks want
+    this; serving CLIs keep the default and pay cold costs in-round.
+    """
+
+    def __init__(self, engine, requests=(), *, name: str = "graph",
+                 prewarm: bool = False):
+        self.engine = engine
+        self.name = name
+        self.prewarm = prewarm
+        self.tickets = [engine.enqueue(r) for r in requests]
+
+    def add(self, request):
+        ticket = self.engine.enqueue(request)
+        self.tickets.append(ticket)
+        return ticket
+
+    def warmup(self) -> None:
+        if not self.prewarm:
+            return
+        seen = set()
+        for t in self.tickets:
+            if t.done:
+                continue
+            key = self.engine._group_key(t.request)
+            if key not in seen:
+                seen.add(key)
+                self.engine.plan(t.request)
+
+    def ready(self) -> bool:
+        return self.engine.pending() > 0
+
+    def step(self, quantum: int) -> StepReport:
+        t0 = time.perf_counter()
+        resolved = self.engine.run_pending(limit=quantum)
+        return StepReport(items=len(resolved),
+                          seconds=time.perf_counter() - t0)
+
+    def results(self):
+        """Resolved results in admission order (unresolved tickets are
+        skipped — drain the queue first via Gateway.run)."""
+        return [t.result for t in self.tickets if t.done]
+
+    def metrics(self) -> dict:
+        eng = self.engine
+        return {
+            "requests": eng.requests_resolved,
+            "executions": eng.executions,
+            "coalesced": eng.coalesced,
+            "pending": eng.pending(),
+            "latency": eng.latency_percentiles(),
+            "cache_hits": eng.cache.stats.hits,
+            "cache_misses": eng.cache.stats.misses,
+        }
+
+
+class LMDecodeWorkload:
+    """LM tenant: an `LMSession`'s decode loop as a Workload.  One work
+    item = one greedy decode step; prefill (or checkpoint restore, with
+    `resume=True`) happens in warmup()."""
+
+    def __init__(self, session, *, name: str = "lm", resume: bool = False):
+        self.session = session
+        self.name = name
+        self.resume = resume
+
+    def warmup(self) -> None:
+        self.session.start(resume=self.resume)
+
+    def ready(self) -> bool:
+        return self.session.remaining > 0
+
+    def step(self, quantum: int) -> StepReport:
+        t0 = time.perf_counter()
+        n = self.session.decode_steps(quantum)
+        return StepReport(items=n, seconds=time.perf_counter() - t0)
+
+    def metrics(self) -> dict:
+        return self.session.metrics()
+
+
+def _pcts(vals: list[float]) -> dict:
+    arr = np.asarray(vals, dtype=float)
+    if arr.size == 0:
+        return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0}
+    return {
+        "n": int(arr.size),
+        "p50_ms": float(np.percentile(arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(arr, 99) * 1e3),
+    }
+
+
+@dataclass
+class Gateway:
+    """Owns the process mesh and schedules registered workloads on it.
+
+    The mesh is *advisory glue*: workloads that need it (the engine's
+    ShardedMatcher, the LM session) are constructed against
+    `Gateway.mesh`, so there is exactly one device pool per process and
+    the scheduler is the only interleaving authority."""
+
+    mesh: object = None
+    scheduler: RoundScheduler = field(default_factory=RoundScheduler)
+    workloads: list = field(default_factory=list)
+    trace: object = None
+
+    def add(self, workload: Workload, share: Share | None = None):
+        if any(w.name == workload.name for w in self.workloads):
+            raise ValueError(f"duplicate workload name {workload.name!r}")
+        if share is not None:
+            self.scheduler.shares[workload.name] = share
+        self.workloads.append(workload)
+        return workload
+
+    def warmup(self) -> None:
+        for w in self.workloads:
+            w.warmup()
+
+    def run(self, *, max_rounds: int | None = None, warmup: bool = True):
+        """Warm every workload, then drive scheduler rounds until all
+        are drained (or `max_rounds`).  Returns the ScheduleTrace."""
+        if warmup:
+            self.warmup()
+        self.trace = self.scheduler.run(self.workloads,
+                                        max_rounds=max_rounds)
+        return self.trace
+
+    def report(self) -> dict:
+        """Per-workload metrics plus the interference evidence: turn
+        latency (seconds per work item) split solo vs contended."""
+        out = {"rounds": 0, "workloads": {}}
+        turns = self.trace.turns if self.trace is not None else []
+        if self.trace is not None:
+            out["rounds"] = self.trace.rounds
+        for w in self.workloads:
+            mine = [t for t in turns if t.name == w.name and t.items > 0]
+            solo = [t.seconds / t.items for t in mine if not t.contended]
+            cont = [t.seconds / t.items for t in mine if t.contended]
+            rep = {
+                "items": sum(t.items for t in mine),
+                "turns": len(mine),
+                "turn_item_ms": {"solo": _pcts(solo),
+                                 "contended": _pcts(cont)},
+                "metrics": w.metrics(),
+            }
+            if solo and cont:
+                s50 = float(np.percentile(solo, 50))
+                c50 = float(np.percentile(cont, 50))
+                rep["interference_x"] = c50 / s50 if s50 > 0 else float("inf")
+            out["workloads"][w.name] = rep
+        return out

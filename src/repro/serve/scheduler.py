@@ -1,0 +1,153 @@
+"""Round-based co-scheduler for heterogeneous workloads on one mesh.
+
+The Gateway (gateway.py) owns the process's devices; this module owns
+*when each workload runs*.  Scheduling is deliberately cooperative and
+deterministic: JAX dispatch is single-threaded per process, so instead
+of threads + locks the scheduler runs discrete ROUNDS.  Each round it
+visits the registered workloads in a fixed order (priority, then
+registration order) and grants every ready workload `weight` turns of
+`quantum` work items each.  A workload's `step(quantum)` call is its
+entire opportunity for that turn — it must return promptly (quantum
+bounds the work, not wall time) so a hot LM decode can never starve a
+burst of graph queries, and vice versa.
+
+Determinism is the tested property: two workloads with fixed shares
+produce a known interleaving (tests/test_gateway.py), which is what
+makes the mixed-traffic acceptance runs reproducible.
+
+Nothing in this module imports JAX — `Workload` is a structural
+protocol, so the scheduler is unit-testable with scripted fakes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+
+@dataclass(frozen=True)
+class StepReport:
+    """What one `step(quantum)` call actually did."""
+
+    items: int                   # work units completed (<= quantum)
+    seconds: float               # wall time of the step
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """Anything the Gateway can co-schedule.
+
+    name:      stable identifier (used in shares, traces, reports).
+    warmup():  pay one-time costs (compile, prefill, plan preloads)
+               before the first round, so rounds measure steady state.
+    ready():   True while the workload has pending work.
+    step(q):   run up to `q` work items, return a StepReport.
+    metrics(): workload-specific counters for the gateway report.
+    """
+
+    name: str
+
+    def warmup(self) -> None: ...
+
+    def ready(self) -> bool: ...
+
+    def step(self, quantum: int) -> StepReport: ...
+
+    def metrics(self) -> dict: ...
+
+
+@dataclass(frozen=True)
+class Share:
+    """Per-workload scheduling share.
+
+    quantum:  work items granted per turn (units are workload-defined:
+              decode steps for the LM, query tickets for the graph).
+    weight:   turns granted per round — the fair-share knob; a workload
+              with weight 2 gets two `step()` calls for every one of a
+              weight-1 peer.
+    priority: higher-priority workloads take their turns earlier within
+              a round (latency preference, not extra capacity).
+    """
+
+    quantum: int = 1
+    weight: int = 1
+    priority: int = 0
+
+
+@dataclass(frozen=True)
+class Turn:
+    """One `step()` grant, as recorded in the schedule trace."""
+
+    round: int
+    name: str
+    items: int
+    seconds: float
+    contended: bool              # another workload was ready this round
+
+
+@dataclass
+class ScheduleTrace:
+    turns: list[Turn] = field(default_factory=list)
+    rounds: int = 0
+
+    def interleaving(self) -> list[str]:
+        """The turn order as a name sequence (the fairness invariant)."""
+        return [t.name for t in self.turns]
+
+    def items_of(self, name: str) -> int:
+        return sum(t.items for t in self.turns if t.name == name)
+
+
+class RoundScheduler:
+    """Deterministic weighted round-robin over cooperative workloads.
+
+    Every round: sort registered workloads by (-priority, registration
+    order); each ready one receives `weight` consecutive `step(quantum)`
+    calls.  A workload that goes idle mid-round simply stops receiving
+    turns; the loop ends when no workload is ready (or `max_rounds`).
+    """
+
+    def __init__(self, shares: dict[str, Share] | None = None,
+                 *, default: Share = Share()):
+        self.shares = dict(shares or {})
+        self.default = default
+
+    def share_of(self, name: str) -> Share:
+        return self.shares.get(name, self.default)
+
+    def run(self, workloads: list[Workload],
+            *, max_rounds: int | None = None) -> ScheduleTrace:
+        order = sorted(
+            range(len(workloads)),
+            key=lambda i: (-self.share_of(workloads[i].name).priority, i),
+        )
+        trace = ScheduleTrace()
+        rnd = 0
+        while max_rounds is None or rnd < max_rounds:
+            ready = [i for i in order if workloads[i].ready()]
+            if not ready:
+                break
+            contended = len(ready) > 1
+            round_items = 0
+            for i in ready:
+                w = workloads[i]
+                share = self.share_of(w.name)
+                for _ in range(max(share.weight, 1)):
+                    if not w.ready():
+                        break
+                    t0 = time.perf_counter()
+                    rep = w.step(max(share.quantum, 1))
+                    dt = time.perf_counter() - t0
+                    round_items += rep.items
+                    trace.turns.append(Turn(
+                        round=rnd, name=w.name, items=rep.items,
+                        seconds=rep.seconds if rep.seconds > 0 else dt,
+                        contended=contended,
+                    ))
+            rnd += 1
+            if round_items == 0:
+                # every ready workload declined to make progress — a
+                # buggy tenant must not spin the gateway forever
+                break
+        trace.rounds = rnd
+        return trace

@@ -1,0 +1,233 @@
+"""LMSession — the LM serving loop as a reusable, resumable object.
+
+`launch/serve.py`'s monolithic main() owned the whole prefill → decode
+pipeline inline, which made the loop unschedulable (nothing else could
+run between decode steps) and non-restartable (checkpoints were written
+but never read).  LMSession splits it into explicit phases:
+
+    session = LMSession("qwen3-1.7b", smoke=True, batch=4,
+                        prompt_len=64, gen=32,
+                        ckpt_dir=d, ckpt_every=8)
+    session.start(resume=True)       # prefill — or restore mid-decode
+    while session.remaining:
+        session.decode_steps(4)      # any step granularity
+    tokens = session.tokens_out()
+
+so the Gateway can interleave decode steps with graph-query rounds on
+the shared mesh (`LMDecodeWorkload` in gateway.py), and a preempted
+serving process restarts from the last `--ckpt-every` checkpoint
+(`start(resume=True)` reloads cache + tokens + step and continues
+decoding — the restore path the checkpoint hooks always promised).
+
+The checkpoint is {"cache", "tokens"} under step k via train.checkpoint
+(atomic rename + LATEST pointer); k is the number of decode steps
+already applied, so resumed decoding continues at position S + k.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fake_prompts(cfg, B, S, key):
+    """Synthetic prompt batch matching the config family's input spec."""
+    if cfg.stub_frontend and cfg.family == "vlm":
+        return {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16),
+            "positions3": jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, 3, S)
+            ),
+        }
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def seed_cache(cache, prefill_cache, S):
+    """Copy prefill K/V (length S) into the front of the decode cache."""
+
+    def put(dst, src):
+        if dst.ndim >= 2 and src.ndim == dst.ndim and src.shape != dst.shape:
+            # K/V: [..., S, K, hd] into [..., max_seq, K, hd]
+            ax = next(
+                i for i in range(dst.ndim) if src.shape[i] != dst.shape[i]
+            )
+            idx = [slice(None)] * dst.ndim
+            idx[ax] = slice(0, src.shape[ax])
+            return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+        return src.astype(dst.dtype) if src.shape == dst.shape else dst
+
+    if "blocks" in prefill_cache:
+        new_blocks = jax.tree.map(put, cache["blocks"], prefill_cache["blocks"])
+        cache = {**cache, "blocks": new_blocks}
+    if "cross_kv" in prefill_cache:
+        cache = {**cache, "cross_kv": put(cache["cross_kv"],
+                                          prefill_cache["cross_kv"])}
+    return cache
+
+
+class LMSession:
+    """One batched generation: prefill once, then stepwise greedy decode.
+
+    Parameters mirror `launch/serve.py`'s CLI.  `mesh=None` builds the
+    host mesh; pass the Gateway's mesh to co-schedule with other
+    workloads on the same devices.
+    """
+
+    def __init__(self, arch: str, *, smoke: bool = False, batch: int = 4,
+                 prompt_len: int = 64, gen: int = 32, max_seq: int = 0,
+                 mesh=None, model_axis: int = 1, seed: int = 0,
+                 ckpt_dir: str = "", ckpt_every: int = 0):
+        from ..configs import get_config, get_smoke_config
+        from ..launch.mesh import make_host_mesh
+
+        self.arch = arch
+        self.cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        self.mesh = mesh if mesh is not None else make_host_mesh(
+            model=model_axis)
+        self.B = batch
+        self.S = prompt_len
+        self.gen = gen
+        self.max_seq = max_seq or (prompt_len + gen)
+        self.seed = seed
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self._params = None
+        self._decode = None
+        self._cache = None
+        self._tokens = None
+        self._generated: list[np.ndarray] = []
+        self.step_i = 0                 # decode steps already applied
+        self.resumed_from: int | None = None
+        self.prefill_seconds = 0.0
+        self.decode_seconds = 0.0
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, *, resume: bool = False) -> int | None:
+        """Prefill — or, with `resume=True` and a checkpoint present,
+        restore cache/tokens/step and skip the prefill entirely.
+        Returns the restored step (None for a fresh start)."""
+        from ..compat import set_mesh
+        from ..models import transformer as T
+        from .serve_step import make_decode
+
+        key = jax.random.PRNGKey(self.seed)
+        with set_mesh(self.mesh):
+            self._params = jax.jit(lambda k: T.init(self.cfg, k))(key)
+            self._decode, _, c_sh, self._cache_shape = make_decode(
+                self.cfg, self.mesh, batch=self.B, max_seq=self.max_seq
+            )
+            restored = self._try_restore() if resume else None
+            if restored is None:
+                self._prefill(key, c_sh)
+            else:
+                self.resumed_from = self.step_i = restored
+        return self.resumed_from
+
+    def _prefill(self, key, c_sh) -> None:
+        from ..configs import input_specs
+        from ..configs.base import ShapeConfig
+        from ..models import transformer as T
+        from .serve_step import make_prefill
+
+        shape = ShapeConfig("serve", self.S, self.B, "prefill")
+        batch = fake_prompts(self.cfg, self.B, self.S, key)
+        prefill, _, _ = make_prefill(
+            self.cfg, self.mesh, input_specs(self.cfg, shape), q_chunk=0)
+        t0 = time.perf_counter()
+        logits, prefill_cache = jax.block_until_ready(
+            prefill(self._params, batch))
+        self.prefill_seconds = time.perf_counter() - t0
+        cache = jax.jit(
+            lambda: T.init_cache(self.cfg, self.B, self.max_seq),
+            out_shardings=c_sh,
+        )()
+        self._cache = seed_cache(cache, prefill_cache, self.S)
+        self._tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        self._generated = [np.asarray(self._tokens)]
+
+    def _try_restore(self) -> int | None:
+        from ..train import checkpoint as ckpt
+
+        if not self.ckpt_dir:
+            return None
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        tree_like = {
+            "cache": self._cache_shape,
+            "tokens": jax.ShapeDtypeStruct((self.B, 1), jnp.int32),
+        }
+        tree, step = ckpt.restore(self.ckpt_dir, tree_like, step=step)
+        self._cache = tree["cache"]
+        self._tokens = tree["tokens"]
+        # generation up to `step` happened in the previous process;
+        # tokens_out() covers the resumed suffix only
+        self._generated = [np.asarray(self._tokens)]
+        return step
+
+    # -------------------------------------------------------------- decode
+    @property
+    def remaining(self) -> int:
+        return max(self.gen - self.step_i, 0)
+
+    def decode_steps(self, k: int) -> int:
+        """Run up to `k` greedy decode steps (bounded by `remaining`);
+        checkpoints cache+tokens every `ckpt_every` steps.  Returns the
+        number of steps actually run, blocking on the last one so the
+        caller's timing covers real device work."""
+        if self._decode is None:
+            raise RuntimeError("LMSession.start() must run first")
+        from ..compat import set_mesh
+        from ..train import checkpoint as ckpt
+
+        n = min(max(k, 0), self.remaining)
+        if n == 0:
+            return 0
+        t0 = time.perf_counter()
+        with set_mesh(self.mesh):
+            for _ in range(n):
+                i = self.step_i
+                pos = jnp.asarray(self.S + i, jnp.int32)
+                logits, self._cache = self._decode(
+                    self._params, self._tokens, self._cache, pos)
+                self._tokens = jnp.argmax(
+                    logits, axis=-1).astype(jnp.int32)[:, None]
+                self._generated.append(np.asarray(self._tokens))
+                self.step_i = i + 1
+                if (self.ckpt_dir and self.ckpt_every
+                        and self.step_i % self.ckpt_every == 0):
+                    ckpt.save(self.ckpt_dir, self.step_i,
+                              {"cache": self._cache, "tokens": self._tokens})
+            jax.block_until_ready(self._tokens)
+        self.decode_seconds += time.perf_counter() - t0
+        return n
+
+    # ----------------------------------------------------------- reporting
+    def tokens_out(self) -> np.ndarray:
+        """[B, steps+1] generated tokens (since resume, when resumed)."""
+        return np.concatenate(self._generated, axis=1)
+
+    def metrics(self) -> dict:
+        steps = self.step_i - (self.resumed_from or 0)
+        tok_s = (steps * self.B / self.decode_seconds
+                 if self.decode_seconds > 0 else 0.0)
+        return {
+            "arch": self.arch,
+            "batch": self.B,
+            "prompt_len": self.S,
+            "steps_done": self.step_i,
+            "steps_total": self.gen,
+            "resumed_from": self.resumed_from,
+            "prefill_seconds": self.prefill_seconds,
+            "decode_seconds": self.decode_seconds,
+            "decode_tok_s": tok_s,
+            "ms_per_step": (1e3 * self.decode_seconds / steps
+                            if steps else 0.0),
+        }

@@ -93,6 +93,11 @@ def restore(ckpt_dir: str, tree_like, *, step: int | None = None,
     for p, like, sh in zip(paths, leaves, shard_flat):
         m = by_path[p]
         arr = np.load(os.path.join(d, m["file"]))
+        want = np.dtype(m["dtype"])
+        if arr.dtype != want and arr.dtype.itemsize == want.itemsize:
+            # extension dtypes (bfloat16 & friends) round-trip through
+            # .npy as raw void records; the manifest kept the real name
+            arr = arr.view(want)
         assert tuple(arr.shape) == tuple(like.shape), (p, arr.shape, like.shape)
         out.append(jax.device_put(arr, sh) if sh is not None else
                    jax.numpy.asarray(arr))

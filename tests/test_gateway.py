@@ -1,0 +1,328 @@
+"""Gateway serving front door: deterministic scheduling, coalescing,
+plan/enqueue parity with the deprecated submit path, LM session resume,
+and the perf-model bucket layout."""
+import numpy as np
+import pytest
+
+from repro.configs.graphpi import get_pattern
+from repro.core.executor import ExecutorConfig, auto_buckets, compute_stats
+from repro.core.perf_model import GraphStats, predicted_frontier_occupancy
+from repro.graph.datasets import erdos_renyi, rmat
+from repro.query import QueryEngine, QueryRequest, relabeled_variant
+from repro.serve.gateway import (
+    Gateway, GraphQueryWorkload, RoundScheduler, Share, StepReport,
+)
+
+CFG = ExecutorConfig(capacity=1 << 12)
+
+
+# --------------------------------------------------------------- scheduler
+class Scripted:
+    """Workload fake: `items` units of work, fixed per-item seconds."""
+
+    def __init__(self, name, items, seconds_per_item=0.0):
+        self.name = name
+        self.left = items
+        self.spi = seconds_per_item
+        self.warmed = False
+
+    def warmup(self):
+        self.warmed = True
+
+    def ready(self):
+        return self.left > 0
+
+    def step(self, quantum):
+        n = min(quantum, self.left)
+        self.left -= n
+        return StepReport(items=n, seconds=self.spi * n)
+
+    def metrics(self):
+        return {"left": self.left}
+
+
+def test_scheduler_fairness_known_interleaving():
+    """Two workloads with fixed shares → a fully determined trace."""
+    a = Scripted("a", 4)
+    b = Scripted("b", 4)
+    sched = RoundScheduler({"a": Share(quantum=2, weight=1),
+                            "b": Share(quantum=1, weight=2)})
+    trace = sched.run([a, b])
+    # round: a takes 1 turn of 2 items; b takes 2 turns of 1 item each
+    assert trace.interleaving() == ["a", "b", "b", "a", "b", "b"]
+    assert trace.items_of("a") == 4
+    assert trace.items_of("b") == 4
+    assert trace.rounds == 2
+
+
+def test_scheduler_priority_orders_turns():
+    a = Scripted("a", 2)
+    b = Scripted("b", 2)
+    sched = RoundScheduler({"b": Share(quantum=1, priority=1)},
+                           default=Share(quantum=1))
+    trace = sched.run([a, b])
+    assert trace.interleaving() == ["b", "a", "b", "a"]
+
+
+def test_scheduler_drains_unbalanced_workloads():
+    """A workload going idle stops receiving turns; the other finishes."""
+    a = Scripted("a", 1)
+    b = Scripted("b", 5)
+    trace = RoundScheduler(default=Share(quantum=2)).run([a, b])
+    assert trace.items_of("a") == 1
+    assert trace.items_of("b") == 5
+    # a's only turn is contended, b's last turns are solo
+    assert [t.contended for t in trace.turns if t.name == "a"] == [True]
+    assert [t.contended for t in trace.turns if t.name == "b"][-1] is False
+
+
+def test_scheduler_breaks_on_stalled_workload():
+    """A workload claiming ready() but making no progress must not spin
+    the gateway forever."""
+
+    class Stalled(Scripted):
+        def step(self, quantum):
+            return StepReport(items=0, seconds=0.0)
+
+    trace = RoundScheduler().run([Stalled("s", 3)])
+    assert trace.rounds == 1
+
+
+def test_gateway_report_splits_solo_and_contended():
+    a = Scripted("a", 6, seconds_per_item=0.01)
+    b = Scripted("b", 2, seconds_per_item=0.01)
+    gw = Gateway(scheduler=RoundScheduler(default=Share(quantum=2)))
+    gw.add(a)
+    gw.add(b)
+    gw.run()
+    assert a.warmed and b.warmed
+    rep = gw.report()["workloads"]["a"]
+    assert rep["items"] == 6
+    assert rep["turn_item_ms"]["contended"]["n"] >= 1
+    assert rep["turn_item_ms"]["solo"]["n"] >= 1
+    assert rep["interference_x"] == pytest.approx(1.0, rel=0.2)
+
+
+def test_gateway_rejects_duplicate_names():
+    gw = Gateway()
+    gw.add(Scripted("a", 1))
+    with pytest.raises(ValueError):
+        gw.add(Scripted("a", 1))
+
+
+# ------------------------------------------------------- engine round path
+@pytest.fixture(scope="module")
+def tiny_graph():
+    return erdos_renyi(64, 256, seed=7, name="er64")
+
+
+@pytest.fixture(scope="module")
+def tiny_stats(tiny_graph):
+    return compute_stats(tiny_graph, CFG)
+
+
+@pytest.fixture()
+def fresh_engine(tiny_graph, tiny_stats):
+    return QueryEngine(tiny_graph, cfg=CFG, stats=tiny_stats)
+
+
+def test_coalescing_one_execution_many_tickets(fresh_engine):
+    """N iso-variant queries in one round → 1 cache entry, 1 execution,
+    N tickets resolved with the same count."""
+    p = get_pattern("P1")
+    tickets = [fresh_engine.enqueue(QueryRequest(relabeled_variant(p, seed=s)))
+               for s in range(4)]
+    resolved = fresh_engine.run_pending()
+    assert resolved == tickets
+    assert all(t.done for t in tickets)
+    assert len({t.result.count for t in tickets}) == 1
+    assert len(fresh_engine.cache) == 1
+    assert fresh_engine.executions == 1
+    assert fresh_engine.coalesced == 3
+    entry = fresh_engine.cache.entries()[0]
+    assert entry.executions == 1
+    # the lead ticket paid the miss; riders are accounted as hits
+    assert [t.result.cache_hit for t in tickets] == [False, True, True, True]
+    assert [t.result.coalesced for t in tickets] == [False, True, True, True]
+    assert fresh_engine.cache.stats.hits == 3
+    assert fresh_engine.cache.stats.n_searches == 1
+    assert fresh_engine.cache.stats.n_compiles == 1
+
+
+def test_gateway_graph_workload_round(fresh_engine):
+    """Same property driven through the Gateway's scheduler."""
+    p = get_pattern("triangle")
+    reqs = [QueryRequest(relabeled_variant(p, seed=s)) for s in range(3)]
+    gw = Gateway()
+    wl = gw.add(GraphQueryWorkload(fresh_engine, reqs),
+                Share(quantum=len(reqs)))
+    gw.run()
+    results = wl.results()
+    assert len(results) == 3
+    assert len({r.count for r in results}) == 1
+    assert fresh_engine.executions == 1
+    assert fresh_engine.pending() == 0
+    assert wl.metrics()["coalesced"] == 2
+
+
+def test_distinct_classes_micro_batch_in_one_round(fresh_engine):
+    """Distinct classes in a round each execute once (no cross-class
+    merging), in one scheduler turn."""
+    reqs = [QueryRequest(get_pattern("triangle")),
+            QueryRequest(get_pattern("rectangle")),
+            QueryRequest(relabeled_variant(get_pattern("triangle"), 5))]
+    for r in reqs:
+        fresh_engine.enqueue(r)
+    resolved = fresh_engine.run_pending()
+    assert len(resolved) == 3
+    assert fresh_engine.executions == 2
+    assert fresh_engine.coalesced == 1
+    assert len(fresh_engine.cache) == 2
+
+
+def test_plan_never_executes(fresh_engine):
+    planned = fresh_engine.plan(QueryRequest(get_pattern("triangle")))
+    assert not planned.cache_hit
+    assert fresh_engine.executions == 0
+    assert planned.entry.executions == 0
+    # planning again is a pure cache hit
+    assert fresh_engine.plan(QueryRequest(get_pattern("triangle"))).cache_hit
+
+
+def test_unresolved_ticket_raises(fresh_engine):
+    t = fresh_engine.enqueue(QueryRequest(get_pattern("triangle")))
+    assert not t.done
+    with pytest.raises(RuntimeError):
+        _ = t.result
+
+
+# ------------------------------------------- submit parity + deprecation
+@pytest.fixture(scope="module")
+def parity_engine(tiny_graph, tiny_stats):
+    return QueryEngine(tiny_graph, cfg=CFG, stats=tiny_stats)
+
+
+@pytest.mark.parametrize("name", ["P1", "P2", "P3", "P4", "P5", "P6"])
+def test_plan_enqueue_parity_with_submit(parity_engine, name):
+    """The deprecated submit() and the new plan/enqueue rounds must
+    produce identical counts for every paper pattern."""
+    p = get_pattern(name)
+    with pytest.deprecated_call():
+        old = parity_engine.submit(QueryRequest(p))
+    ticket = parity_engine.enqueue(
+        QueryRequest(relabeled_variant(p, seed=11)))
+    parity_engine.run_pending()
+    new = ticket.result
+    assert new.count == old.count
+    assert new.canon_key == old.canon_key
+    assert new.cache_hit          # submit's round planted the entry
+    assert not old.overflowed and not new.overflowed
+
+
+def test_serve_shim_deprecated_and_sequential(fresh_engine):
+    p = get_pattern("triangle")
+    with pytest.deprecated_call():
+        results = fresh_engine.serve(
+            [QueryRequest(p), QueryRequest(relabeled_variant(p, 3))])
+    # one request per round: the re-query is a true cache hit, not a
+    # coalesced rider (bit-identical legacy accounting)
+    assert [r.cache_hit for r in results] == [False, True]
+    assert [r.coalesced for r in results] == [False, False]
+    assert fresh_engine.executions == 2
+
+
+def test_submit_drains_fifo_tickets_ahead_of_it(fresh_engine):
+    """submit() on an engine with older pending tickets resolves them
+    first (FIFO) and still returns its own result."""
+    early = fresh_engine.enqueue(QueryRequest(get_pattern("triangle")))
+    with pytest.deprecated_call():
+        res = fresh_engine.submit(QueryRequest(get_pattern("rectangle")))
+    assert early.done
+    assert res.pattern_name == "rectangle"
+    assert fresh_engine.executions == 2
+
+
+# ------------------------------------------------------- LM session resume
+@pytest.mark.parametrize("arch", ["qwen3-1.7b"])
+def test_lmsession_resume_matches_uninterrupted(tmp_path, arch):
+    """Kill a session mid-generation; resuming from its checkpoint must
+    reproduce the uninterrupted run's remaining tokens exactly."""
+    from repro.serve.session import LMSession
+
+    kw = dict(smoke=True, batch=2, prompt_len=8, gen=4, seed=0)
+    full = LMSession(arch, **kw)
+    full.start()
+    while full.remaining:
+        full.decode_steps(4)
+    ref = full.tokens_out()            # [B, 5]: prefill tok + 4 steps
+
+    interrupted = LMSession(arch, **kw, ckpt_dir=str(tmp_path),
+                            ckpt_every=2)
+    interrupted.start()
+    interrupted.decode_steps(2)        # checkpoint lands at step 2
+    # "preemption": a fresh session restores and finishes the generation
+    resumed = LMSession(arch, **kw, ckpt_dir=str(tmp_path))
+    assert resumed.start(resume=True) == 2
+    assert resumed.remaining == 2
+    while resumed.remaining:
+        resumed.decode_steps(1)
+    np.testing.assert_array_equal(resumed.tokens_out(), ref[:, 2:])
+    assert resumed.metrics()["resumed_from"] == 2
+
+
+def test_lmsession_resume_without_checkpoint_prefills(tmp_path):
+    from repro.serve.session import LMSession
+
+    s = LMSession("qwen3-1.7b", smoke=True, batch=2, prompt_len=8, gen=1,
+                  ckpt_dir=str(tmp_path))
+    assert s.start(resume=True) is None     # nothing to restore
+    assert s.resumed_from is None
+    assert s.remaining == 1
+
+
+# --------------------------------------------------- model bucket layout
+def test_predicted_frontier_occupancy_edge_weighted():
+    deg = np.array([1, 1, 2, 4], dtype=np.int32)
+    stats = GraphStats(4, 4, tri_cnt=0)     # p2=0 → amplification 1
+    assert predicted_frontier_occupancy(stats, deg, 1) == pytest.approx(6 / 8)
+    assert predicted_frontier_occupancy(stats, deg, 2) == pytest.approx(4 / 8)
+    assert predicted_frontier_occupancy(stats, deg, 4) == 0.0
+    # amplification is clamped to [1, 4] and never exceeds occupancy 1
+    dense = GraphStats(4, 4, tri_cnt=10**9)
+    assert predicted_frontier_occupancy(dense, deg, 1) <= 1.0
+    assert (predicted_frontier_occupancy(dense, deg, 2)
+            >= predicted_frontier_occupancy(stats, deg, 2))
+
+
+def test_model_buckets_layout_and_exact_count():
+    from repro.core.executor import Matcher
+    from repro.core.oracle import count_embeddings_oracle
+    from repro.core.pattern import clique
+    from repro.core.plan import build_plan
+    from repro.core.restrictions import generate_restriction_sets
+
+    g = rmat(8, 6, seed=7, name="rmat8")
+    stats = GraphStats(g.n, g.m, tri_cnt=max(g.m, 1))   # plan-time proxy
+    # thresholds shrunk so the tiny CI graph exercises all three buckets
+    legacy = auto_buckets(g, small=8, mid=32)
+    model = auto_buckets(g, small=8, mid=32, stats=stats)
+    widths = [w for w, _ in model]
+    assert widths == sorted(widths)
+    assert widths[-1] >= g.max_degree
+    assert all(0 < f <= 1.0 for _, f in model)
+    assert [w for w, _ in legacy] == widths     # same thresholds, new fracs
+    # the layouts genuinely differ: occupancy is edge-weighted, not the
+    # 4×-padded vertex share
+    assert model != legacy
+
+    tri = clique(3)
+    plan = build_plan(tri, (0, 1, 2),
+                      generate_restriction_sets(tri, max_sets=1)[0])
+    expect = count_embeddings_oracle(g.n, g.edge_array(), tri)
+    got = Matcher(g, plan, ExecutorConfig(capacity=1 << 12,
+                                          degree_buckets=model)).count()
+    assert got.count == expect
+    assert not got.overflowed
+    # the layout is part of the compiled-program fingerprint
+    assert ExecutorConfig(degree_buckets=model).fingerprint() != \
+        ExecutorConfig(degree_buckets=legacy).fingerprint()
