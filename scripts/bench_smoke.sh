@@ -37,3 +37,11 @@ print(f"bench_smoke OK: cold={phases['cold']['value']:.3g} q/s, "
       f"warm={phases['warm']['value']:.3g} q/s "
       f"({phases['speedup']['value']:.1f}x)")
 EOF
+
+# Store hygiene ride-along: warm a plan store exactly the way a serving
+# replica would, then fsck it — every record written this run must still
+# verify (a non-empty quarantine fails the smoke).
+python scripts/plan_warmup.py \
+  --cache-dir "$REPRO_BENCH_OUT/plan-store" --patterns P1,P2 \
+  --capacity 4096
+scripts/static_check.sh --fsck "$REPRO_BENCH_OUT/plan-store"

@@ -4,7 +4,11 @@
 #      README.md or DESIGN.md;
 #   2. every relative markdown link in tracked *.md files resolves;
 #   3. every path-looking token in README.md shell snippets names a
-#      real file, and every `python -m pkg.mod` names a real module.
+#      real file, and every `python -m pkg.mod` names a real module;
+#   4. no stale references: every `repro.x.y` dotted module and every
+#      `src/repro/...` path mentioned anywhere in the docs still exists;
+#   5. no orphan packages: every directory package under src/repro (any
+#      depth) is mentioned in README.md or DESIGN.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -63,6 +67,37 @@ for block in snippets:
         for tok in re.findall(r"[\w./-]+\.(?:sh|py)\b", line):
             if "/" in tok and not os.path.exists(tok):
                 fail.append(f"README snippet names missing file: {tok}")
+
+# --- 4. stale module / path references ------------------------------------
+doc_texts = {md: open(md).read() for md in md_files}
+for md, text in doc_texts.items():
+    for path in set(re.findall(r"src/repro[\w/.-]*", text)):
+        path = path.rstrip(".")           # sentence-final period
+        if not os.path.exists(path):
+            fail.append(f"{md}: stale path reference -> {path}")
+    for dotted in set(re.findall(r"\brepro\.[\w.]+\b", text)):
+        # accept any prefix that is a real module — trailing components
+        # may be attributes (repro.core.oracle.count_embeddings_oracle)
+        parts = dotted.split(".")
+        ok = False
+        while len(parts) >= 2 and not ok:
+            rel = "/".join(parts)
+            ok = any(os.path.exists(p) for p in (f"src/{rel}.py",
+                                                 f"src/{rel}"))
+            parts = parts[:-1]
+        if not ok:
+            fail.append(f"{md}: stale module reference -> {dotted}")
+
+# --- 5. orphan packages (any depth, not just top level) --------------------
+for dirpath, dirnames, filenames in os.walk("src/repro"):
+    dirnames[:] = [d for d in dirnames if not d.startswith("__")]
+    for d in dirnames:
+        if not any(f.endswith(".py")
+                   for f in os.listdir(os.path.join(dirpath, d))):
+            continue
+        if not re.search(rf"\b{re.escape(d)}\b", docs):
+            fail.append(f"orphan package {os.path.join(dirpath, d)}: "
+                        f"mentioned in neither README.md nor DESIGN.md")
 
 if fail:
     print("docs_check FAILED:", file=sys.stderr)

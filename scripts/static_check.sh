@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Static soundness gate (wired into scripts/tier1.sh and a blocking CI
+# job): the `repro.analysis` verifier's three passes —
+#   1. plan/restriction soundness over the P1-P6 pattern library
+#      (+ every plan the planner builds for them),
+#   2. kernel contracts for level_expand, including abstract tracing of
+#      every executor call shape (--deep: eval_shape + jaxpr walk, no
+#      compilation, no device),
+#   3. repo-invariant AST lint over src/repro.
+# Exits non-zero iff any ERROR finding is produced; extra flags are
+# forwarded (e.g. `scripts/static_check.sh --lint` for the lint alone,
+# or `--fsck DIR` to verify a plan-store directory).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m repro.analysis --deep "$@"

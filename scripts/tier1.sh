@@ -16,3 +16,4 @@ fi
 scripts/query_smoke.sh
 scripts/gateway_smoke.sh
 scripts/docs_check.sh
+scripts/static_check.sh

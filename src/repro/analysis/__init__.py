@@ -1,0 +1,26 @@
+# Static soundness verifier (DESIGN.md §6): plan/restriction soundness
+# proofs (soundness), abstract kernel-contract checking
+# (kernel_contracts), and the repo-invariant AST lint (lint), all
+# reporting structured Finding records.  Front doors: the
+# `python -m repro.analysis` CLI and `PlanStore.fsck()`.
+from .findings import (
+    ERROR, INFO, WARNING, Finding, error_count, format_findings, has_errors,
+)
+from .soundness import (
+    verify_configuration, verify_plan, verify_restriction_set,
+    verify_schedule,
+)
+
+__all__ = [
+    "ERROR",
+    "INFO",
+    "WARNING",
+    "Finding",
+    "error_count",
+    "format_findings",
+    "has_errors",
+    "verify_configuration",
+    "verify_plan",
+    "verify_restriction_set",
+    "verify_schedule",
+]

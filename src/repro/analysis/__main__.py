@@ -1,0 +1,126 @@
+"""Front door: `python -m repro.analysis` — run the static verifier.
+
+Default runs all three passes over the repo and the P1–P6 pattern
+library; exit status is 1 iff any ERROR finding is produced, so the CI
+gate and `scripts/static_check.sh` are just this module's exit code.
+
+  python -m repro.analysis                      # lint + kernel + soundness
+  python -m repro.analysis --lint               # one pass only
+  python -m repro.analysis --soundness
+  python -m repro.analysis --kernel-contracts --deep
+  python -m repro.analysis --fsck /path/to/plan-store
+  python -m repro.analysis --root /some/checkout --lint
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .findings import Finding, error_count, format_findings
+from .kernel_contracts import check_graph_contract
+from .lint import lint_tree
+from .soundness import verify_plan, verify_restriction_set
+
+# shape-only contract probes at paper scale (n, m, max_degree) — graphs
+# CI cannot materialize but production serves (Table I ballpark)
+_PAPER_SHAPES = (
+    ("wiki-vote", (7_115, 103_689, 1_065)),
+    ("patents", (3_774_768, 16_518_948, 793)),
+    ("orkut", (3_072_441, 117_185_083, 33_313)),
+)
+
+
+def run_lint(root: Path) -> list[Finding]:
+    return lint_tree(root)
+
+
+def run_soundness() -> list[Finding]:
+    """Prove every restriction set the planner can generate for the
+    benchmark patterns, then one end-to-end plan per pattern."""
+    from ..configs.graphpi import EXTRA_PATTERNS, PATTERNS
+    from ..core.plan import best_iep_k, build_plan
+    from ..core.restrictions import generate_restriction_sets
+    from ..core.schedule import generate_schedules
+
+    out: list[Finding] = []
+    for name, pat in {**PATTERNS, **EXTRA_PATTERNS}.items():
+        for rs in generate_restriction_sets(pat):
+            out += verify_restriction_set(
+                pat, rs, location=f"{name} res_set={tuple(rs)}")
+        rs = generate_restriction_sets(pat)[0]
+        order = next(iter(generate_schedules(pat)))
+        k = best_iep_k(pat, order, rs)
+        plan = build_plan(pat, order, rs, iep_k=k)
+        out += verify_plan(plan, location=f"{name} plan iep_k={k}")
+    return out
+
+
+def run_kernel_contracts(*, deep: bool) -> list[Finding]:
+    out: list[Finding] = []
+    if deep:
+        from ..graph.datasets import named_dataset
+
+        out += check_graph_contract(named_dataset("tiny-er"), deep=True)
+    for label, shape in _PAPER_SHAPES:
+        for f in check_graph_contract(shape):
+            out.append(Finding(f.severity, f.rule,
+                               f"{label}/{f.location}", f.message))
+    return out
+
+
+def run_fsck(store_dir: Path) -> list[Finding]:
+    from ..query.store import PlanStore
+
+    store = PlanStore(store_dir)
+    report = store.fsck()
+    out: list[Finding] = []
+    for digest, findings in report["findings"].items():
+        out += findings
+    sys.stdout.write(
+        f"fsck: {report['checked']} records checked, "
+        f"{report['quarantined']} quarantined, "
+        f"{report['stats_checked']} stats records checked\n")
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static soundness verifier (DESIGN.md, Static analysis layer)")
+    ap.add_argument("--root", type=Path, default=Path.cwd(),
+                    help="repo checkout to lint (default: cwd)")
+    ap.add_argument("--lint", action="store_true",
+                    help="repo-invariant AST lint only")
+    ap.add_argument("--soundness", action="store_true",
+                    help="plan/restriction soundness over P1-P6 only")
+    ap.add_argument("--kernel-contracts", action="store_true",
+                    help="kernel contract proofs only")
+    ap.add_argument("--deep", action="store_true",
+                    help="also abstractly trace kernel call sites "
+                         "(eval_shape + jaxpr walk; needs jax)")
+    ap.add_argument("--fsck", type=Path, metavar="DIR",
+                    help="run PlanStore.fsck() on this store directory")
+    args = ap.parse_args(argv)
+
+    selected = args.lint or args.soundness or args.kernel_contracts \
+        or args.fsck is not None
+    findings: list[Finding] = []
+    if args.lint or not selected:
+        findings += run_lint(args.root)
+    if args.kernel_contracts or not selected:
+        findings += run_kernel_contracts(deep=args.deep)
+    if args.soundness or not selected:
+        findings += run_soundness()
+    if args.fsck is not None:
+        findings += run_fsck(args.fsck)
+
+    errs = error_count(findings)
+    print(format_findings(
+        findings,
+        header=f"repro.analysis: {len(findings)} finding(s), {errs} error(s)"))
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,235 @@
+"""Pass 3 — repo-invariant lint: AST enforcement of rules the codebase
+states only in comments.
+
+Four rule classes over `src/repro`:
+
+  scheduler-no-jax        serve/scheduler.py promises "Nothing in this
+                          module imports JAX" — the Gateway relies on it
+                          to unit-test scheduling with scripted fakes
+                          and to keep dispatch single-threaded semantics
+                          out of the policy layer.
+  scheduler-determinism   the round-robin path must be deterministic:
+                          no `time.time`/`time.time_ns`, no `random`,
+                          `numpy.random`, `secrets`, or `uuid` in
+                          serve/scheduler.py (`time.perf_counter` is
+                          fine — it only feeds latency reports, never
+                          ordering).
+  compat-only-drift       JAX APIs that moved between releases
+                          (shard_map, enable_x64, export,
+                          sharding.set_mesh/get_abstract_mesh) are
+                          shimmed once in compat.py; every other module
+                          must import the shim, never either home
+                          directly — old OR new, since using the new
+                          home directly silently breaks the pin.
+                          `jax.experimental.pallas` is not drifted and
+                          stays allowed.
+  no-tracer-concretize    inside jit-decorated functions and Pallas
+                          kernel bodies (`*_body` / `*_kernel`),
+                          `.item()`, `int(x)`, `float(x)` on traced
+                          values raise ConcretizationTypeError at trace
+                          time — or worse, silently constant-fold a
+                          weak type.  Static-shape reads
+                          (`int(x.shape[0])`, `len(...)`) are allowed.
+
+Pure `ast` — no imports of the linted modules, so a module that fails
+to import is still lintable (and a syntax error becomes a finding).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import ERROR, Finding
+
+# dotted names whose ONLY sanctioned home is compat.py (old + new homes)
+_DRIFTED_ATTRS = {
+    "jax.experimental.shard_map",
+    "jax.experimental.enable_x64",
+    "jax.experimental.export",
+    "jax.shard_map",
+    "jax.enable_x64",
+    "jax.export",
+    "jax.sharding.set_mesh",
+    "jax.sharding.get_abstract_mesh",
+}
+# `from <module> import <name>` forms of the same APIs
+_DRIFTED_FROM = {
+    "jax.experimental": {"shard_map", "enable_x64", "export"},
+    "jax.experimental.shard_map": None,      # None = any name
+    "jax.experimental.export": None,
+    "jax": {"shard_map", "enable_x64", "export"},
+    "jax.sharding": {"set_mesh", "get_abstract_mesh"},
+}
+
+_NONDETERMINISTIC_MODULES = {"random", "secrets", "uuid"}
+_NONDETERMINISTIC_ATTRS = {
+    "time.time", "time.time_ns", "numpy.random", "np.random",
+    "os.urandom",
+}
+
+
+def _err(rule: str, loc: str, msg: str) -> Finding:
+    return Finding(ERROR, rule, loc, msg)
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'jax.sharding.set_mesh' for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _has_jit_decorator(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target) or ""
+        if name in ("jit", "jax.jit", "pjit", "jax.pjit"):
+            return True
+        # @partial(jax.jit, ...) / @functools.partial(jit, ...)
+        if isinstance(dec, ast.Call) and name.split(".")[-1] == "partial":
+            for arg in dec.args[:1]:
+                inner = _dotted(arg) or ""
+                if inner in ("jit", "jax.jit", "pjit", "jax.pjit"):
+                    return True
+    return False
+
+
+def _is_static_shape_read(arg: ast.AST) -> bool:
+    """int(x.shape[0]) / float(len(xs)) / int(x.ndim) are trace-safe."""
+    for node in ast.walk(arg):
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "shape", "ndim", "size", "dtype"):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "len":
+            return True
+    return False
+
+
+def _check_traced_body(fn, rel: str) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(fn):
+        loc = f"{rel}:{getattr(node, 'lineno', fn.lineno)}"
+        if isinstance(node, ast.Call):
+            callee = node.func
+            if isinstance(callee, ast.Attribute) and callee.attr == "item":
+                out.append(_err(
+                    "no-tracer-concretize", loc,
+                    f".item() inside traced function {fn.name!r} forces a "
+                    f"device sync / concretization at trace time"))
+            elif isinstance(callee, ast.Name) and callee.id in (
+                    "int", "float") and node.args:
+                arg = node.args[0]
+                if not isinstance(arg, ast.Constant) \
+                        and not _is_static_shape_read(arg):
+                    out.append(_err(
+                        "no-tracer-concretize", loc,
+                        f"{callee.id}() on a (potentially traced) value "
+                        f"inside {fn.name!r}; only static shape reads are "
+                        f"trace-safe"))
+    return out
+
+
+def lint_source(src: str, rel: str) -> list[Finding]:
+    """Lint one module's source; `rel` is the repo-relative path used in
+    finding locations and to select per-file rules."""
+    try:
+        tree = ast.parse(src, filename=rel)
+    except SyntaxError as e:
+        return [_err("syntax", f"{rel}:{e.lineno or 0}", f"does not parse: {e.msg}")]
+
+    is_scheduler = rel.replace("\\", "/").endswith("serve/scheduler.py")
+    is_compat = rel.replace("\\", "/").endswith("repro/compat.py")
+    out: list[Finding] = []
+
+    for node in ast.walk(tree):
+        loc = f"{rel}:{getattr(node, 'lineno', 0)}"
+
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                if is_scheduler and root == "jax":
+                    out.append(_err(
+                        "scheduler-no-jax", loc,
+                        f"import {alias.name}: the scheduler is the "
+                        f"JAX-free policy layer by contract"))
+                if is_scheduler and root in _NONDETERMINISTIC_MODULES:
+                    out.append(_err(
+                        "scheduler-determinism", loc,
+                        f"import {alias.name}: nondeterminism in the "
+                        f"round-robin path breaks the tested interleaving"))
+
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            root = mod.split(".")[0]
+            if is_scheduler and root == "jax":
+                out.append(_err(
+                    "scheduler-no-jax", loc,
+                    f"from {mod} import ...: the scheduler is the "
+                    f"JAX-free policy layer by contract"))
+            if is_scheduler and root in _NONDETERMINISTIC_MODULES:
+                out.append(_err(
+                    "scheduler-determinism", loc,
+                    f"from {mod} import ...: nondeterminism in the "
+                    f"round-robin path"))
+            if not is_compat and mod in _DRIFTED_FROM:
+                allowed = _DRIFTED_FROM[mod]
+                names = [a.name for a in node.names
+                         if allowed is None or a.name in allowed]
+                for name in names:
+                    out.append(_err(
+                        "compat-only-drift", loc,
+                        f"from {mod} import {name}: drifted JAX API — "
+                        f"import it from repro.compat instead"))
+
+        elif isinstance(node, ast.Attribute):
+            name = _dotted(node)
+            if name is None:
+                continue
+            if is_scheduler and name.split(".")[0] == "jax":
+                out.append(_err(
+                    "scheduler-no-jax", loc,
+                    f"{name}: the scheduler must not touch JAX"))
+            if not is_compat and name in _DRIFTED_ATTRS:
+                out.append(_err(
+                    "compat-only-drift", loc,
+                    f"{name}: drifted JAX API — go through repro.compat"))
+            if is_scheduler and name in _NONDETERMINISTIC_ATTRS:
+                out.append(_err(
+                    "scheduler-determinism", loc,
+                    f"{name}: nondeterministic call in the round-robin "
+                    f"path (time.perf_counter is the sanctioned clock)"))
+
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _has_jit_decorator(node) or node.name.endswith(("_body",
+                                                              "_kernel")):
+                out += _check_traced_body(node, rel)
+
+    return out
+
+
+def lint_path(path: Path, root: Path) -> list[Finding]:
+    rel = str(path.relative_to(root))
+    try:
+        src = path.read_text()
+    except OSError as e:
+        return [_err("syntax", rel, f"unreadable: {e}")]
+    return lint_source(src, rel)
+
+
+def lint_tree(root: Path | str) -> list[Finding]:
+    """Lint every Python module under `<root>/src/repro` (or `root`
+    itself when it already points inside a source tree)."""
+    root = Path(root)
+    base = root / "src" / "repro"
+    if not base.is_dir():
+        base = root
+    out: list[Finding] = []
+    for path in sorted(base.rglob("*.py")):
+        out += lint_path(path, root)
+    return out

@@ -153,8 +153,18 @@ class QueryEngine:
         self.cache = cache                  # caller-provided cache
         self._arrays = device_graph(graph)     # ONE resident CSR upload
         t0 = time.perf_counter()
-        self.stats = stats if stats is not None else compute_stats(
-            graph, self.cfg)
+        if stats is None:
+            # a restarted engine skips the startup triangle count when
+            # the attached store has a stats record for this exact graph
+            # (content fingerprint); compute-and-persist otherwise
+            if self.cache.store is not None:
+                stats = self.cache.store.load_graph_stats(graph.fingerprint)
+            if stats is None:
+                stats = compute_stats(graph, self.cfg)
+                if self.cache.store is not None:
+                    self.cache.store.save_graph_stats(
+                        graph.fingerprint, stats)
+        self.stats = stats
         self.stats_seconds = time.perf_counter() - t0
         self._latencies: list[float] = []
         self._edges = None                     # lazy, for oracle verification

@@ -114,6 +114,7 @@ class StoreStats:
     saves: int = 0
     exec_drops: int = 0          # executable rejected, plans kept
     save_fails: int = 0
+    verify_fails: int = 0        # records rejected by the soundness pass
     rejects: dict = field(default_factory=dict)   # reason -> count
 
     def reject(self, reason: str) -> None:
@@ -152,7 +153,8 @@ class PlanStore:
         self.stats = StoreStats()
 
     def __len__(self) -> int:
-        return sum(1 for f in os.listdir(self.vdir) if f.endswith(".json"))
+        return sum(1 for f in os.listdir(self.vdir)
+                   if f.endswith(".json") and not f.startswith("stats-"))
 
     # ------------------------------------------------------------ paths
     def _paths(self, digest: str) -> tuple[str, str]:
@@ -254,6 +256,17 @@ class PlanStore:
         except (KeyError, TypeError, ValueError):
             self.stats.reject("corrupt")
             return None
+        # plan_from_dict round-trips blindly by design (O(read) loads);
+        # re-prove soundness here so a drifted/tampered record degrades
+        # to a miss instead of serving a wrong count.
+        mode = str(rec.get("mode", "graphpi"))
+        from ..analysis.findings import has_errors
+        from ..analysis.soundness import verify_plan
+
+        if has_errors(verify_plan(plan, mode=mode, location=digest)):
+            self.stats.verify_fails += 1
+            self.stats.reject("verify")
+            return None
         exec_bytes = None
         if rec.get("has_executable"):
             if rec.get("backend") != jax.default_backend():
@@ -270,7 +283,7 @@ class PlanStore:
             pattern=pattern,
             config=config,
             plan=plan,
-            mode=str(rec.get("mode", "graphpi")),
+            mode=mode,
             use_iep=bool(rec.get("use_iep", False)),
             sharded=bool(rec.get("sharded", False)),
             exec_bytes=exec_bytes,
@@ -282,8 +295,149 @@ class PlanStore:
         """Every loadable record (rejections counted, not raised) — the
         warm-from-disk path iterates these and keeps the compatible ones."""
         for fname in sorted(os.listdir(self.vdir)):
-            if not fname.endswith(".json"):
+            if not fname.endswith(".json") or fname.startswith("stats-"):
                 continue
             rec = self._load_digest(fname[: -len(".json")])
             if rec is not None:
                 yield rec
+
+    # ------------------------------------------------------- graph stats
+    # GraphStats (|V|, |E|, exact triangle count) is a property of the
+    # DATA GRAPH, not of plan-time code, so its record is keyed purely by
+    # the graph's content fingerprint and survives code/jax upgrades that
+    # invalidate plan records; only a schema change rejects it.
+    def _stats_path(self, graph_fingerprint: str) -> str:
+        return os.path.join(self.vdir, f"stats-{graph_fingerprint}.json")
+
+    def save_graph_stats(self, graph_fingerprint: str, stats) -> bool:
+        """Persist |V|/|E|/tri_cnt for one graph; False on write failure
+        (same degradation policy as plan saves)."""
+        record = {
+            "schema_version": SCHEMA_VERSION,
+            "created_at": time.time(),
+            "graph_fingerprint": graph_fingerprint,
+            "n_vertices": int(stats.n_vertices),
+            "n_edges": int(stats.n_edges),
+            "tri_cnt": int(stats.tri_cnt),
+        }
+        try:
+            self._atomic_write(
+                self._stats_path(graph_fingerprint),
+                json.dumps(record, separators=(",", ":")).encode())
+        except OSError:
+            self.stats.save_fails += 1
+            return False
+        self.stats.saves += 1
+        return True
+
+    def load_graph_stats(self, graph_fingerprint: str):
+        """Rehydrated `GraphStats` for this graph, or None (counted)."""
+        from ..core.perf_model import GraphStats
+
+        path = self._stats_path(graph_fingerprint)
+        if not os.path.exists(path):
+            self.stats.misses += 1
+            return None
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.stats.reject("stats_corrupt")
+            return None
+        if rec.get("schema_version") != SCHEMA_VERSION or \
+                rec.get("graph_fingerprint") != graph_fingerprint:
+            self.stats.reject("stats_mismatch")
+            return None
+        try:
+            stats = GraphStats(n_vertices=int(rec["n_vertices"]),
+                               n_edges=int(rec["n_edges"]),
+                               tri_cnt=int(rec["tri_cnt"]))
+        except (KeyError, TypeError, ValueError):
+            self.stats.reject("stats_corrupt")
+            return None
+        if stats.n_vertices < 0 or stats.n_edges < 0 or stats.tri_cnt < 0:
+            self.stats.reject("stats_corrupt")
+            return None
+        self.stats.loads += 1
+        return stats
+
+    # -------------------------------------------------------------- fsck
+    def fsck(self) -> dict:
+        """Re-prove every on-disk record sound; quarantine what fails.
+
+        Runs the analysis soundness pass (`verify_plan`) over each plan
+        record and structural validation over each stats record, MOVING
+        failures into `<vdir>/quarantine/` so they stop being served but
+        stay inspectable.  Counted, never raised — fsck on a damaged
+        store must report, not crash (same policy as load).  Returns
+        {"checked", "quarantined", "stats_checked", "findings"} with
+        `findings` keyed by digest.
+        """
+        from ..analysis.findings import ERROR, Finding, has_errors
+        from ..analysis.soundness import verify_plan
+
+        report = {"checked": 0, "quarantined": 0, "stats_checked": 0,
+                  "findings": {}}
+        for fname in sorted(os.listdir(self.vdir)):
+            if not fname.endswith(".json"):
+                continue
+            digest = fname[: -len(".json")]
+            findings: list[Finding] = []
+            if fname.startswith("stats-"):
+                report["stats_checked"] += 1
+                fp = fname[len("stats-"): -len(".json")]
+                if self.load_graph_stats(fp) is None:
+                    findings.append(Finding(
+                        ERROR, "stats-record", digest,
+                        "stats record is corrupt or its fingerprint does "
+                        "not match its filename"))
+            else:
+                report["checked"] += 1
+                findings = self._fsck_record(digest, verify_plan)
+            if has_errors(findings):
+                report["findings"][digest] = findings
+                if self._quarantine(digest):
+                    report["quarantined"] += 1
+        return report
+
+    def _fsck_record(self, digest: str, verify_plan) -> list:
+        from ..analysis.findings import ERROR, WARNING, Finding
+
+        json_path, _ = self._paths(digest)
+        try:
+            with open(json_path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            return [Finding(ERROR, "record-corrupt", digest,
+                            f"unreadable record: {e}")]
+        try:
+            plan = plan_from_dict(rec["plan"])
+        except (KeyError, TypeError, ValueError) as e:
+            return [Finding(ERROR, "record-corrupt", digest,
+                            f"plan does not round-trip: {e}")]
+        out = verify_plan(plan, mode=str(rec.get("mode", "graphpi")),
+                          location=digest)
+        reason = self._check_header(rec)
+        if reason is not None:
+            # stale ≠ unsound: the loader already rejects these, so fsck
+            # only reports them (re-warming overwrites in place)
+            out.append(Finding(
+                WARNING, "record-stale", digest,
+                f"header mismatch ({reason}); record is skipped by the "
+                f"loader until re-warmed"))
+        return out
+
+    def _quarantine(self, digest: str) -> bool:
+        qdir = os.path.join(self.vdir, "quarantine")
+        json_path, exec_path = self._paths(digest)
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            os.replace(json_path,
+                       os.path.join(qdir, os.path.basename(json_path)))
+            if os.path.exists(exec_path):
+                os.replace(exec_path,
+                           os.path.join(qdir, os.path.basename(exec_path)))
+        except OSError:
+            self.stats.reject("quarantine_fail")
+            return False
+        return True
