@@ -1,4 +1,11 @@
-"""Shared benchmark plumbing: timing, stats caching, result records."""
+"""Shared benchmark plumbing: timing, stats caching, result records.
+
+Observability rides along for free: with the tracer enabled
+(REPRO_TRACE=1, as `scripts/bench_smoke.sh` sets) `timed_count` emits
+`bench.warmup` / `bench.count` spans around its measurements and
+`emit()` writes `<name>.trace.json` + `<name>.metrics.json` next to
+each benchmark's result artifact.
+"""
 from __future__ import annotations
 
 import json
@@ -12,8 +19,23 @@ from repro.core.executor import (
 )
 from repro.core.perf_model import GraphStats
 from repro.core.plan import build_plan
+from repro.obs import MetricsRegistry, get_tracer
 
 ART_DIR = os.environ.get("REPRO_BENCH_OUT", "artifacts/bench")
+
+# Registry snapshotted by emit(): benchmark mains pass it to their
+# engine/gateway so the metrics artifact carries the run's counters.
+REGISTRY = MetricsRegistry()
+
+
+def fresh_registry() -> MetricsRegistry:
+    """New registry for one benchmark main.  benchmarks/run.py executes
+    several mains in one process; swapping the module registry keeps
+    each emitted snapshot scoped to its own benchmark (no collectors
+    left over from the previous engine)."""
+    global REGISTRY
+    REGISTRY = MetricsRegistry()
+    return REGISTRY
 
 _STATS_CACHE: dict[str, GraphStats] = {}
 _GRAPH_CACHE: dict[str, object] = {}
@@ -50,13 +72,16 @@ def timed_count(graph, plan, *, capacity: int = 1 << 15,
         cfg = ExecutorConfig(capacity=capacity, use_pallas=force,
                              degree_buckets=auto_buckets(graph))
     m = Matcher(graph, plan, cfg)
-    m.warmup()
+    with get_tracer().span("bench.warmup", graph=graph.name):
+        m.warmup()
     best = None
     count = None
-    for _ in range(max(repeats, 1)):
-        t0 = time.perf_counter()
-        out = m.count()
-        dt = time.perf_counter() - t0
+    for rep in range(max(repeats, 1)):
+        with get_tracer().span("bench.count", graph=graph.name,
+                               repeat=rep):
+            t0 = time.perf_counter()
+            out = m.count()
+            dt = time.perf_counter() - t0
         assert not out.overflowed, "frontier overflow at MAX_CAPACITY"
         count = out.count
         best = dt if best is None else min(best, dt)
@@ -83,3 +108,16 @@ def emit(rows: list[Row], name: str) -> None:
         keys = ",".join(f"{k}={v}" for k, v in r.keys.items())
         print(f"{r.bench},{keys},{r.value:.6g},{r.unit}")
     print(f"[bench] wrote {path}")
+    # tracer on (REPRO_TRACE=1): every benchmark gains trace + metrics
+    # artifacts for free next to its result JSON
+    tr = get_tracer()
+    if tr.enabled and len(tr):
+        tpath = os.path.join(ART_DIR, f"{name}.trace.json")
+        n = tr.export_chrome(tpath)
+        print(f"[bench] wrote {tpath} ({n} spans)")
+        tr.clear()               # one trace per benchmark, not cumulative
+        mpath = os.path.join(ART_DIR, f"{name}.metrics.json")
+        with open(mpath, "w") as f:
+            json.dump(REGISTRY.snapshot(), f, indent=1, default=str,
+                      sort_keys=True)
+        print(f"[bench] wrote {mpath}")

@@ -27,7 +27,7 @@ from repro.serve.gateway import (
 )
 from repro.serve.session import LMSession
 
-from ._util import Row, emit, get_pattern, graph_of, stats_of
+from ._util import Row, emit, fresh_registry, get_pattern, graph_of, stats_of
 
 QUICK = {"dataset": "tiny-er", "patterns": ["P1", "triangle"],
          "capacity": 1 << 13, "bursts": 2, "dups": 2,
@@ -53,7 +53,7 @@ def _burst_requests(patterns, bursts: int, dups: int):
 
 def _serve_phase(engine, requests, quantum: int, lm_spec=None):
     """Drain `requests` through a Gateway; returns (gateway, results)."""
-    gw = Gateway()
+    gw = Gateway(metrics=engine.metrics)
     wl = gw.add(GraphQueryWorkload(engine, requests),
                 Share(quantum=quantum))
     if lm_spec is not None:
@@ -70,6 +70,7 @@ def run(full: bool = False) -> list[Row]:
         graph,
         cfg=ExecutorConfig(capacity=spec["capacity"]),
         stats=stats_of(spec["dataset"]),
+        metrics=fresh_registry(),
     )
     # prewarm every class: both phases measure steady-state execution
     for p in patterns:

@@ -16,7 +16,7 @@ import time
 from repro.core.executor import ExecutorConfig
 from repro.query import PlanCache, QueryEngine, QueryRequest, relabeled_variant
 
-from ._util import Row, emit, get_pattern, graph_of, stats_of
+from ._util import Row, emit, fresh_registry, get_pattern, graph_of, stats_of
 
 QUICK = {"dataset": "tiny-er", "patterns": ["P1", "P2", "P4"],
          "capacity": 1 << 14}
@@ -43,6 +43,7 @@ def run(full: bool = False) -> list[Row]:
         cfg=ExecutorConfig(capacity=spec["capacity"]),
         cache=PlanCache(),
         stats=stats_of(spec["dataset"]),
+        metrics=fresh_registry(),
     )
 
     t0 = time.perf_counter()

@@ -11,6 +11,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_BENCH_OUT="${REPRO_BENCH_OUT:-artifacts/bench-smoke}"
+# Tracing on: benchmarks emit <name>.trace.json + <name>.metrics.json
+# next to their result artifacts (benchmarks/_util.emit), gated below.
+export REPRO_TRACE=1
 
 python -m benchmarks.run --only query
 
@@ -36,6 +39,30 @@ if fail:
 print(f"bench_smoke OK: cold={phases['cold']['value']:.3g} q/s, "
       f"warm={phases['warm']['value']:.3g} q/s "
       f"({phases['speedup']['value']:.1f}x)")
+EOF
+
+# Observability gate: the trace artifact must exist, parse, and carry
+# real spans (repro.obs summarize exits nonzero on empty/malformed),
+# and the metrics snapshot must be non-empty JSON.
+python -m repro.obs summarize "$REPRO_BENCH_OUT/query_throughput.trace.json"
+python - <<'EOF'
+import json
+import os
+import sys
+
+path = os.path.join(os.environ["REPRO_BENCH_OUT"],
+                    "query_throughput.metrics.json")
+try:
+    snap = json.load(open(path))
+except (OSError, ValueError) as e:
+    print(f"bench_smoke FAILED: metrics snapshot {path}: {e}",
+          file=sys.stderr)
+    sys.exit(1)
+if not snap:
+    print(f"bench_smoke FAILED: metrics snapshot {path} is empty",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"bench_smoke OK: metrics snapshot has {len(snap)} keys")
 EOF
 
 # Store hygiene ride-along: warm a plan store exactly the way a serving

@@ -1,7 +1,7 @@
 """Pass 3 — repo-invariant lint: AST enforcement of rules the codebase
 states only in comments.
 
-Four rule classes over `src/repro`:
+Five rule classes over `src/repro`:
 
   scheduler-no-jax        serve/scheduler.py promises "Nothing in this
                           module imports JAX" — the Gateway relies on it
@@ -11,9 +11,17 @@ Four rule classes over `src/repro`:
   scheduler-determinism   the round-robin path must be deterministic:
                           no `time.time`/`time.time_ns`, no `random`,
                           `numpy.random`, `secrets`, or `uuid` in
-                          serve/scheduler.py (`time.perf_counter` is
-                          fine — it only feeds latency reports, never
-                          ordering).
+                          serve/scheduler.py (`repro.obs.timer` is the
+                          sanctioned clock — it only feeds latency
+                          reports, never ordering).
+  no-raw-timing           modules under serve/ and query/ must not call
+                          `time.perf_counter` (or `perf_counter_ns`,
+                          `monotonic`, `monotonic_ns`, `process_time`)
+                          directly: latency measured ad hoc never
+                          reaches the metrics registry or the trace.
+                          `repro.obs` (`timer()`, `Timer`, tracer
+                          spans) is the one clock; obs/ itself is the
+                          sanctioned home of the raw calls.
   compat-only-drift       JAX APIs that moved between releases
                           (shard_map, enable_x64, export,
                           sharding.set_mesh/get_abstract_mesh) are
@@ -66,6 +74,24 @@ _NONDETERMINISTIC_ATTRS = {
     "time.time", "time.time_ns", "numpy.random", "np.random",
     "os.urandom",
 }
+
+# raw clocks forbidden outside repro/obs in the serving + query layers
+_RAW_TIMING_NAMES = {
+    "perf_counter", "perf_counter_ns", "monotonic", "monotonic_ns",
+    "process_time", "process_time_ns",
+}
+_RAW_TIMING_ATTRS = {f"time.{n}" for n in _RAW_TIMING_NAMES}
+
+
+def _in_timed_scope(rel: str) -> bool:
+    """True for modules under serve/ or query/ (where `no-raw-timing`
+    applies), excluding repro/obs — the one sanctioned home of the raw
+    clock calls."""
+    p = rel.replace("\\", "/")
+    if "/obs/" in p or p.startswith("obs/"):
+        return False
+    return any(f"/{d}/" in p or p.startswith(f"{d}/")
+               for d in ("serve", "query"))
 
 
 def _err(rule: str, loc: str, msg: str) -> Finding:
@@ -145,6 +171,7 @@ def lint_source(src: str, rel: str) -> list[Finding]:
 
     is_scheduler = rel.replace("\\", "/").endswith("serve/scheduler.py")
     is_compat = rel.replace("\\", "/").endswith("repro/compat.py")
+    is_timed = _in_timed_scope(rel)
     out: list[Finding] = []
 
     for node in ast.walk(tree):
@@ -177,6 +204,15 @@ def lint_source(src: str, rel: str) -> list[Finding]:
                     "scheduler-determinism", loc,
                     f"from {mod} import ...: nondeterminism in the "
                     f"round-robin path"))
+            if is_timed and mod == "time":
+                for a in node.names:
+                    if a.name in _RAW_TIMING_NAMES:
+                        out.append(_err(
+                            "no-raw-timing", loc,
+                            f"from time import {a.name}: raw timing in "
+                            f"the serve/query path — use repro.obs "
+                            f"(timer()/Timer or a tracer span) so the "
+                            f"measurement reaches the metrics registry"))
             if not is_compat and mod in _DRIFTED_FROM:
                 allowed = _DRIFTED_FROM[mod]
                 names = [a.name for a in node.names
@@ -203,7 +239,13 @@ def lint_source(src: str, rel: str) -> list[Finding]:
                 out.append(_err(
                     "scheduler-determinism", loc,
                     f"{name}: nondeterministic call in the round-robin "
-                    f"path (time.perf_counter is the sanctioned clock)"))
+                    f"path (repro.obs.timer is the sanctioned clock)"))
+            if is_timed and name in _RAW_TIMING_ATTRS:
+                out.append(_err(
+                    "no-raw-timing", loc,
+                    f"{name}: raw timing in the serve/query path — use "
+                    f"repro.obs (timer()/Timer or a tracer span) so the "
+                    f"measurement reaches the metrics registry"))
 
         elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             if _has_jit_decorator(node) or node.name.endswith(("_body",

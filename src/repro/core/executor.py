@@ -34,6 +34,7 @@ import numpy as np
 
 from ..compat import enable_x64, shard_map
 from ..graph.csr import GraphCSR
+from ..obs import get_tracer
 from .pattern import Pattern, clique
 from .perf_model import GraphStats
 from .plan import MatchingPlan, build_plan
@@ -161,11 +162,20 @@ class CountResult:
 # --------------------------------------------------------------------------
 # single-shard counting kernel (pure function of device arrays; jit-safe)
 # --------------------------------------------------------------------------
-def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
+def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
+                   cfg: ExecutorConfig, *, level_cb=None):
     """Returns count(indptr, degrees, flat, v0) -> (count i64, needed i32).
 
     `W` = candidate-window width (graph max degree), static.
     `degrees` must be padded to [n+1] with 0 at index n (sentinel).
+
+    `level_cb` (keyword-only) hooks per-level observability: when given,
+    every schedule level runs as ``level_cb(i, thunk)`` where `thunk`
+    computes that level's `expand_level` (or the IEP tail, `i="iep"`) —
+    the callback wraps it in a span and may fence on the results.  Only
+    meaningful on an EAGER (un-jitted) count fn: under jit the callback
+    would fire once at trace time with abstract values, so the Matcher
+    only routes here on the `--trace-sync` path.
     """
     n = plan.n
     depth = plan.depth
@@ -425,15 +435,19 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int, cfg: ExecutorConfig):
             valid = jnp.pad(valid, (0, C - T))
         needed = jnp.asarray(T, dtype=jnp.int32)
         for i in range(1, depth):
-            out, new_valid, needed = expand_level(
-                i, emb, valid, needed, indptr, degrees, flat)
+            thunk = partial(expand_level, i, emb, valid, needed,
+                            indptr, degrees, flat)
+            out, new_valid, needed = (
+                thunk() if level_cb is None else level_cb(i, thunk))
             if new_valid is None:          # last enumeration level
                 return out, needed
             emb, valid = out, new_valid
         if plan.iep is None:
             # depth-1 == 0: single-vertex pattern — count valid v0 rows
             return jnp.sum(valid, dtype=jnp.int64), needed
-        vals, need2 = iep_value(emb, valid, indptr, degrees, flat)
+        iep_thunk = partial(iep_value, emb, valid, indptr, degrees, flat)
+        vals, need2 = (iep_thunk() if level_cb is None
+                       else level_cb("iep", iep_thunk))
         return jnp.sum(vals), jnp.maximum(needed, need2)
 
     return count
@@ -484,6 +498,7 @@ class Matcher:
         self.cfg = cfg or ExecutorConfig()
         self._W = max(graph.max_degree, 1)
         self._fns: dict[int, object] = {}     # capacity -> jitted count_fn
+        self._traced_fns: dict[int, object] = {}  # eager --trace-sync twins
         self._arrays = arrays if arrays is not None else device_graph(graph)
         self._capacity = self.cfg.capacity    # sticky escalated capacity
 
@@ -494,6 +509,35 @@ class Matcher:
                 replace(self.cfg, capacity=capacity),
             ))
         return self._fns[capacity]
+
+    def _level_cb(self, i, thunk):
+        """`--trace-sync` per-level hook: one `executor.level` span per
+        schedule position, fenced with block_until_ready so the span
+        duration is real device time, annotated with the surviving
+        frontier size and the level's capacity demand."""
+        with get_tracer().span("executor.level", level=i) as sp:
+            out = thunk()
+            jax.block_until_ready(out)
+            if isinstance(out, tuple) and len(out) == 3:
+                _, new_valid, needed = out
+                sp.set(needed=int(needed))
+                if new_valid is not None:
+                    sp.set(frontier=int(new_valid.sum()))
+        return out
+
+    def _traced_fn(self, capacity: int):
+        """Eager (un-jitted) twin of :meth:`_fn` with the per-level span
+        hook — dispatched only when the tracer asks for device-fenced
+        levels (`--trace-sync`): per-level spans are impossible inside
+        one jitted program, and the fencing serializes the pipeline, so
+        this path must never be the default."""
+        if capacity not in self._traced_fns:
+            self._traced_fns[capacity] = _make_count_fn(
+                self.plan, self._W, _bs_iters(self._W),
+                replace(self.cfg, capacity=capacity),
+                level_cb=self._level_cb,
+            )
+        return self._traced_fns[capacity]
 
     def warmup(self, *, chunk: int | None = None) -> None:
         """Compile against a sentinel frontier.  Pass the same `chunk`
@@ -557,6 +601,7 @@ class Matcher:
         (the resident graph shared via ``arrays=`` stays alive at its
         owner).  The matcher is unusable afterwards."""
         self._fns.clear()
+        self._traced_fns.clear()
         self._arrays = None
 
     def count(self, *, chunk: int | None = None) -> CountResult:
@@ -568,10 +613,17 @@ class Matcher:
             raise RuntimeError("matcher was released (evicted from cache)")
         graph, cfg = self.graph, self.cfg
         indptr, degrees, flat = self._arrays
-        with enable_x64(True):
+        tr = get_tracer()
+        # per-level device fencing is strictly opt-in (tracer.sync =
+        # --trace-sync): the eager twin serializes the dispatch pipeline
+        trace_sync = tr.enabled and tr.sync
+        with enable_x64(True), tr.span(
+                "executor.count", depth=self.plan.depth,
+                buckets=cfg.fingerprint(), sync=trace_sync) as csp:
             total = 0
             overflowed = False
             max_needed = 0
+            dispatches = 0
             chunk = min(chunk or cfg.capacity, cfg.capacity)
             # spans: (start, end, capacity).  Start at the last count's
             # escalated capacity so warm repeats (the serve path) skip
@@ -583,12 +635,23 @@ class Matcher:
                 s, e, cap = spans.pop()
                 self._capacity = max(self._capacity, cap)
                 width = min(chunk, cap)
-                v0 = jnp.arange(s, e, dtype=jnp.int32)
-                if e - s < width:
-                    v0 = jnp.pad(v0, (0, width - (e - s)),
-                                 constant_values=graph.n)
-                cnt, needed = self._fn(cap)(indptr, degrees, flat, v0)
-                needed = int(needed)
+                with tr.span("executor.dispatch", v0_start=s, v0_end=e,
+                             capacity=cap, frontier=e - s) as dsp:
+                    v0 = jnp.arange(s, e, dtype=jnp.int32)
+                    if e - s < width:
+                        v0 = jnp.pad(v0, (0, width - (e - s)),
+                                     constant_values=graph.n)
+                    # fn resolution inside the span: a cold capacity
+                    # (escalation) compiles here, attributed to this
+                    # dispatch
+                    fn = (self._traced_fn(cap) if trace_sync
+                          else self._fn(cap))
+                    cnt, needed = fn(indptr, degrees, flat, v0)
+                    # int() blocks until the device result is ready, so
+                    # the dispatch span always covers real compute time
+                    needed = int(needed)
+                    dsp.set(needed=needed)
+                dispatches += 1
                 max_needed = max(max_needed, needed)
                 if needed > cap:
                     if e - s > 1:
@@ -601,6 +664,7 @@ class Matcher:
                         total += int(cnt)
                     continue
                 total += int(cnt)
+            csp.set(dispatches=dispatches, max_needed=max_needed)
         return CountResult(count=total // self.plan.iep_divisor,
                            overflowed=overflowed, max_needed=max_needed)
 
@@ -708,18 +772,25 @@ class ShardedMatcher:
         if self._arrays is None:
             raise RuntimeError("matcher was released (evicted from cache)")
         indptr, degrees, flat = self._arrays
+        tr = get_tracer()
         # start from the last successful capacity so warm repeats skip
         # the doomed undersized passes, not just their compilation
         capacity = self._capacity
-        while True:
-            with enable_x64(True):
-                cnt, needed = self._fn(capacity)(indptr, degrees, flat,
-                                                 self._v0)
-                needed = int(needed)
-            if needed <= capacity or capacity >= Matcher.MAX_CAPACITY:
-                break
-            while capacity < min(needed, Matcher.MAX_CAPACITY):
-                capacity *= 2
+        with tr.span("executor.count", depth=self.plan.depth,
+                     sharded=True, chunk=self.chunk) as csp:
+            while True:
+                with enable_x64(True), tr.span(
+                        "executor.dispatch", capacity=capacity,
+                        frontier=int(self._v0.shape[0])) as dsp:
+                    cnt, needed = self._fn(capacity)(indptr, degrees, flat,
+                                                     self._v0)
+                    needed = int(needed)
+                    dsp.set(needed=needed)
+                if needed <= capacity or capacity >= Matcher.MAX_CAPACITY:
+                    break
+                while capacity < min(needed, Matcher.MAX_CAPACITY):
+                    capacity *= 2
+            csp.set(max_needed=needed, capacity=capacity)
         self._capacity = capacity
         return CountResult(
             count=int(cnt) // self.plan.iep_divisor,

@@ -75,17 +75,23 @@ def main(argv=None):
     ap.add_argument("--single-device", action="store_true",
                     help="graph engine off the mesh (LM still uses it)")
     ap.add_argument("--seed", type=int, default=0)
+    from ..obs.cli import add_trace_args, finish_tracing, start_tracing
+
+    add_trace_args(ap)
     args = ap.parse_args(argv)
 
     from ..configs.graphpi import get_dataset, get_pattern
     from ..core.executor import ExecutorConfig, auto_buckets, compute_stats
     from ..launch.mesh import shared_host_mesh
     from ..launch.query_serve import build_requests
+    from ..obs import MetricsRegistry
     from ..query import PlanCache, PlanStore, QueryEngine, canonical_key
     from ..serve.gateway import (
         Gateway, GraphQueryWorkload, LMDecodeWorkload, Share,
     )
     from ..serve.session import LMSession
+
+    start_tracing(args)
 
     if args.warm_from_disk and not args.cache_dir:
         print("[gateway] --warm-from-disk requires --cache-dir")
@@ -108,10 +114,14 @@ def main(argv=None):
 
         cfg = replace(cfg, degree_buckets=auto_buckets(graph, stats=stats))
     store = PlanStore(args.cache_dir) if args.cache_dir else None
+    # ONE registry for the whole front door: the engine's query-latency
+    # histogram and the scheduler's per-share turn histograms land in
+    # the same snapshot (and reset_window resets both at once)
+    metrics = MetricsRegistry()
     engine = QueryEngine(
         graph, cfg=cfg, mesh=graph_mesh, chunk=args.chunk or None,
         cache=PlanCache(max_entries=args.max_entries or None, store=store),
-        stats=stats,
+        stats=stats, metrics=metrics,
     )
     print(f"[gateway] graph={graph.name} (|V|={graph.n}, |E|={graph.m}) "
           f"resident on {engine.summary()['devices']} device(s)"
@@ -125,7 +135,7 @@ def main(argv=None):
     print(f"[gateway] {len(requests)} graph requests "
           f"({distinct} distinct isomorphism classes)")
 
-    gw = Gateway(mesh=mesh)
+    gw = Gateway(mesh=mesh, metrics=metrics)
     graph_wl = gw.add(GraphQueryWorkload(engine, requests),
                       Share(quantum=max(args.graph_quantum, 1)))
     if not args.no_lm:
@@ -181,6 +191,8 @@ def main(argv=None):
         print(f"[gateway] lm: {m['steps_done']}/{m['steps_total']} steps "
               f"({how}, {m['decode_tok_s']:.1f} tok/s, "
               f"{m['ms_per_step']:.1f} ms/step)")
+
+    finish_tracing(args, registry=metrics, tag="gateway")
 
     rc = 0
     bad = [r for r in results if r.verified is False]

@@ -40,12 +40,17 @@ def main(argv=None):
                     help="persistent plan store: repeat invocations skip "
                          "the configuration search (and the JIT, single-"
                          "device) via the on-disk cache (DESIGN.md §5)")
+    from ..obs.cli import add_trace_args, finish_tracing, start_tracing
+
+    add_trace_args(ap)
     args = ap.parse_args(argv)
 
     from ..configs.graphpi import get_dataset, get_pattern
     from ..core.executor import ExecutorConfig
     from ..launch.mesh import make_host_mesh
     from ..query import PlanStore, QueryEngine, QueryRequest
+
+    start_tracing(args)
 
     pattern = get_pattern(args.pattern)
     graph = get_dataset(args.dataset)
@@ -76,6 +81,8 @@ def main(argv=None):
           f"(query latency {res.latency_s:.3f}s incl. search+compile; "
           f"max frontier rows used: {res.max_needed}"
           f"{', OVERFLOWED' if res.overflowed else ''})")
+
+    finish_tracing(args, registry=engine.metrics, tag="mine")
 
     if args.verify:
         print(f"[mine] oracle={res.expected}  "

@@ -120,13 +120,19 @@ def main(argv=None):
                     help="tickets per scheduler round; >1 coalesces "
                          "same-class duplicates within a round into one "
                          "execution")
+    from ..obs.cli import add_trace_args, finish_tracing, start_tracing
+
+    add_trace_args(ap)
     args = ap.parse_args(argv)
 
     from ..configs.graphpi import get_dataset, get_pattern
     from ..core.executor import ExecutorConfig
     from ..launch.mesh import shared_host_mesh
+    from ..obs import MetricsRegistry
     from ..query import PlanCache, PlanStore, QueryEngine, canonical_key
     from ..serve.gateway import Gateway, GraphQueryWorkload, Share
+
+    start_tracing(args)
 
     if args.warm_from_disk and not args.cache_dir:
         print("[serve] --warm-from-disk requires --cache-dir")
@@ -137,12 +143,15 @@ def main(argv=None):
     if not args.single_device and len(jax.devices()) > 1:
         mesh = shared_host_mesh(model=args.model_axis)
     store = PlanStore(args.cache_dir) if args.cache_dir else None
+    # one registry shared by engine and gateway (one snapshot per run)
+    metrics = MetricsRegistry()
     engine = QueryEngine(
         graph,
         cfg=ExecutorConfig(capacity=args.capacity),
         mesh=mesh,
         chunk=args.chunk or None,
         cache=PlanCache(max_entries=args.max_entries or None, store=store),
+        metrics=metrics,
     )
     print(f"[serve] graph={graph.name} (|V|={graph.n}, |E|={graph.m}) "
           f"resident on {engine.summary()['devices']} device(s); "
@@ -161,7 +170,7 @@ def main(argv=None):
     print(f"[serve] {len(requests)} requests "
           f"({distinct} distinct isomorphism classes)")
 
-    gw = Gateway(mesh=mesh)
+    gw = Gateway(mesh=mesh, metrics=metrics)
     workload = gw.add(GraphQueryWorkload(engine, requests),
                       Share(quantum=max(args.round_quantum, 1)))
     gw.run()
@@ -188,6 +197,8 @@ def main(argv=None):
               f"{s['store']['saves']} saves, "
               f"{cache['export_fails']} export failures, "
               f"rejects={s['store']['rejects']}")
+
+    finish_tracing(args, registry=metrics, tag="serve")
 
     rc = 0
     bad = [r for r in results if r.verified is False]

@@ -28,7 +28,6 @@ counts AOT serialization failures — the entry still persists plan-only).
 """
 from __future__ import annotations
 
-import time
 from collections import OrderedDict
 from dataclasses import dataclass, replace as dc_replace
 
@@ -42,6 +41,7 @@ from ..core.pattern import Pattern
 from ..core.perf_model import GraphStats
 from ..core.plan import MatchingPlan, build_plan
 from ..graph.csr import GraphCSR
+from ..obs import get_tracer, timer
 from .canon import canonical_form, canonical_key
 
 MODES = ("graphpi", "graphzero", "naive")
@@ -209,14 +209,18 @@ class PlanCache:
                 return entry, False
 
         canon = canonical_form(pattern)
-        t0 = time.perf_counter()
-        if mode == "graphpi":
-            config = search_configuration(canon, stats, use_iep=use_iep).best
-        elif mode == "graphzero":
-            config = graphzero_configuration(canon, stats, use_iep=use_iep)
-        else:  # naive: no restrictions; entry.count divides by |Aut|
-            config = search_configuration(canon, stats, use_iep=False).best
-        search_s = time.perf_counter() - t0
+        with get_tracer().span("cache.search", canon_key=key[0],
+                               mode=mode), timer() as t:
+            if mode == "graphpi":
+                config = search_configuration(
+                    canon, stats, use_iep=use_iep).best
+            elif mode == "graphzero":
+                config = graphzero_configuration(
+                    canon, stats, use_iep=use_iep)
+            else:  # naive: no restrictions; entry.count divides by |Aut|
+                config = search_configuration(canon, stats,
+                                              use_iep=False).best
+        search_s = t.seconds
         self.stats.n_searches += 1
         self.stats.search_seconds += search_s
 
@@ -230,24 +234,25 @@ class PlanCache:
         compile_s = 0.0
         exec_bytes = None
         if warm:
-            t0 = time.perf_counter()
-            if mesh is None and self.store is not None:
-                # AOT export BEFORE warmup: export traces/lowers the
-                # program once and install makes warmup compile that
-                # exact lowering — one trace total instead of
-                # trace-compile-retrace, and local serving runs the
-                # same bytes a restarted replica will load
-                try:
-                    exec_bytes = matcher.export_bytes(chunk=chunk)
-                    matcher.install_exported(exec_bytes, chunk=chunk)
-                except Exception:
-                    self.stats.export_fails += 1
-                    exec_bytes = None
-            if mesh is not None:
-                matcher.warmup()          # chunk is baked into the stripes
-            else:
-                matcher.warmup(chunk=chunk)
-            compile_s = time.perf_counter() - t0
+            with get_tracer().span("cache.compile", canon_key=key[0],
+                                   mode=mode), timer() as t:
+                if mesh is None and self.store is not None:
+                    # AOT export BEFORE warmup: export traces/lowers the
+                    # program once and install makes warmup compile that
+                    # exact lowering — one trace total instead of
+                    # trace-compile-retrace, and local serving runs the
+                    # same bytes a restarted replica will load
+                    try:
+                        exec_bytes = matcher.export_bytes(chunk=chunk)
+                        matcher.install_exported(exec_bytes, chunk=chunk)
+                    except Exception:
+                        self.stats.export_fails += 1
+                        exec_bytes = None
+                if mesh is not None:
+                    matcher.warmup()      # chunk is baked into the stripes
+                else:
+                    matcher.warmup(chunk=chunk)
+            compile_s = t.seconds
             self.stats.n_compiles += 1
             self.stats.compile_seconds += compile_s
 
@@ -289,12 +294,13 @@ class PlanCache:
                     installed = True
                 except Exception:
                     self.stats.aot_load_fails += 1
-            t0 = time.perf_counter()
-            if mesh is not None:
-                matcher.warmup()
-            else:
-                matcher.warmup(chunk=chunk)
-            dt = time.perf_counter() - t0
+            with get_tracer().span("cache.warm", canon_key=key[0],
+                                   aot=installed), timer() as t:
+                if mesh is not None:
+                    matcher.warmup()
+                else:
+                    matcher.warmup(chunk=chunk)
+            dt = t.seconds
             if installed:
                 self.stats.aot_loads += 1
                 self.stats.aot_load_seconds += dt

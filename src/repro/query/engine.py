@@ -30,7 +30,6 @@ counters that prove hits never re-search or re-compile.
 """
 from __future__ import annotations
 
-import time
 import warnings
 from dataclasses import dataclass
 
@@ -40,6 +39,7 @@ from ..core.executor import ExecutorConfig, compute_stats, device_graph
 from ..core.pattern import Pattern
 from ..core.perf_model import GraphStats
 from ..graph.csr import GraphCSR
+from ..obs import MetricsRegistry, get_tracer, latency_summary, timer
 from .cache import DEFAULT_MAX_ENTRIES, CacheEntry, PlanCache
 from .canon import canonical_key
 
@@ -140,7 +140,8 @@ class QueryEngine:
                  mesh=None, axis: str = "data", chunk: int | None = None,
                  cache: PlanCache | None = None,
                  store=None,
-                 stats: GraphStats | None = None):
+                 stats: GraphStats | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.graph = graph
         self.cfg = cfg or ExecutorConfig()
         self.mesh = mesh
@@ -152,21 +153,27 @@ class QueryEngine:
             cache.store = store             # attach persistence to the
         self.cache = cache                  # caller-provided cache
         self._arrays = device_graph(graph)     # ONE resident CSR upload
-        t0 = time.perf_counter()
-        if stats is None:
-            # a restarted engine skips the startup triangle count when
-            # the attached store has a stats record for this exact graph
-            # (content fingerprint); compute-and-persist otherwise
-            if self.cache.store is not None:
-                stats = self.cache.store.load_graph_stats(graph.fingerprint)
+        with timer() as t:
             if stats is None:
-                stats = compute_stats(graph, self.cfg)
+                # a restarted engine skips the startup triangle count when
+                # the attached store has a stats record for this exact graph
+                # (content fingerprint); compute-and-persist otherwise
                 if self.cache.store is not None:
-                    self.cache.store.save_graph_stats(
-                        graph.fingerprint, stats)
+                    stats = self.cache.store.load_graph_stats(
+                        graph.fingerprint)
+                if stats is None:
+                    stats = compute_stats(graph, self.cfg)
+                    if self.cache.store is not None:
+                        self.cache.store.save_graph_stats(
+                            graph.fingerprint, stats)
         self.stats = stats
-        self.stats_seconds = time.perf_counter() - t0
-        self._latencies: list[float] = []
+        self.stats_seconds = t.seconds
+        # registries are per-engine (benchmarks/run.py executes several
+        # benchmark mains in one process; each needs a clean window) —
+        # launchers that want one pane pass a shared instance
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._lat_hist = self.metrics.histogram("engine.query_latency_ms")
+        self.metrics.register_collector(self._collect)
         self._edges = None                     # lazy, for oracle verification
         self._oracle: dict[str, int] = {}      # canon_key -> oracle count
         self._pending: list[Ticket] = []
@@ -176,16 +183,38 @@ class QueryEngine:
         self.executions = 0                    # entry.count() dispatches
         self.coalesced = 0                     # tickets riding an execution
 
+    def _collect(self) -> dict:
+        """Engine/cache/store counters for `metrics.snapshot()` — the
+        dataclass stats objects stay the storage; this merges them into
+        the one `subsystem.metric` pane."""
+        out = {
+            "engine.requests_resolved": self.requests_resolved,
+            "engine.executions": self.executions,
+            "engine.coalesced": self.coalesced,
+            "engine.pending": len(self._pending),
+            "engine.cache_entries": len(self.cache),
+        }
+        for k, v in self.cache.stats.as_dict().items():
+            out[f"cache.{k}"] = v
+        if self.cache.store is not None:
+            for k, v in self.cache.store.stats.as_dict().items():
+                out[f"store.{k}"] = v
+        return out
+
     # ------------------------------------------------------ async serving
     def plan(self, request: QueryRequest) -> PlannedQuery:
         """Cache/plan resolution ONLY — search + plan build + JIT warmup
         on a miss, pure lookup on a hit.  Never executes a count."""
-        entry, hit = self.cache.get_or_build(
-            request.pattern, self.graph, self.stats,
-            cfg=self.cfg, mesh=self.mesh, axis=self.axis,
-            mode=request.mode, use_iep=request.use_iep,
-            chunk=self.chunk, arrays=self._arrays,
-        )
+        with get_tracer().span(
+                "engine.plan", pattern=request.pattern.name or "anon",
+                mode=request.mode) as sp:
+            entry, hit = self.cache.get_or_build(
+                request.pattern, self.graph, self.stats,
+                cfg=self.cfg, mesh=self.mesh, axis=self.axis,
+                mode=request.mode, use_iep=request.use_iep,
+                chunk=self.chunk, arrays=self._arrays,
+            )
+            sp.set(cache_hit=hit, canon_key=entry.canon_key)
         return PlannedQuery(entry=entry, cache_hit=hit)
 
     def enqueue(self, request: QueryRequest) -> Ticket:
@@ -228,25 +257,35 @@ class QueryEngine:
         groups: dict[tuple, list[Ticket]] = {}
         for t in take:
             groups.setdefault(self._group_key(t.request), []).append(t)
-        for tickets in groups.values():
-            self._execute_group(tickets)
+        with get_tracer().span("engine.round", tickets=len(take),
+                               groups=len(groups),
+                               coalesced=len(take) - len(groups)):
+            for tickets in groups.values():
+                self._execute_group(tickets)
         return take
 
     def _execute_group(self, tickets: list[Ticket]) -> None:
-        t0 = time.perf_counter()
         lead = tickets[0].request
-        planned = self.plan(lead)
-        entry, hit = planned.entry, planned.cache_hit
-        out = entry.count(chunk=self.chunk)
-        entry.executions += 1
-        self.executions += 1
-        latency = time.perf_counter() - t0
+        with timer() as t_all:
+            planned = self.plan(lead)
+            entry, hit = planned.entry, planned.cache_hit
+            with get_tracer().span(
+                    "engine.execute", pattern=lead.pattern.name or "anon",
+                    canon_key=entry.canon_key, cache_hit=hit,
+                    riders=len(tickets) - 1):
+                out = entry.count(chunk=self.chunk)
+            entry.executions += 1
+            self.executions += 1
+        latency = t_all.seconds
 
         expected = None
         if any(t.request.verify for t in tickets):
-            expected = self._oracle_count(entry.canon_key, lead.pattern)
+            with get_tracer().span("engine.verify",
+                                   canon_key=entry.canon_key):
+                expected = self._oracle_count(entry.canon_key,
+                                              lead.pattern)
         for j, t in enumerate(tickets):
-            self._latencies.append(latency)
+            self._lat_hist.observe(latency * 1e3)
             self.requests_resolved += 1
             if j > 0:
                 # a coalesced rider is a logical cache hit: it was served
@@ -332,21 +371,25 @@ class QueryEngine:
             axis=self.axis, chunk=self.chunk, arrays=self._arrays)
 
     # ------------------------------------------------------------- reporting
+    def reset_window(self) -> None:
+        """Start a fresh measurement window (e.g. between benchmark
+        warmup and measured phases): registry histograms and counters
+        zero; cache/store state and the dataclass counters (which
+        describe the whole process lifetime) are untouched.  The Gateway
+        exposes the same method on its registry, so both sides of a
+        serving benchmark reset identically."""
+        self.metrics.reset_window()
+
     def reset_latencies(self) -> None:
-        """Start a fresh latency window (e.g. between benchmark phases);
-        cache state and counters are untouched."""
-        self._latencies.clear()
+        """Deprecated spelling of :meth:`reset_window` (kept for the
+        benchmark harness)."""
+        self.reset_window()
 
     def latency_percentiles(self) -> dict:
-        lat = np.asarray(self._latencies, dtype=float)
-        if lat.size == 0:
-            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
-        return {
-            "n": int(lat.size),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "mean_ms": float(lat.mean() * 1e3),
-        }
+        """Per-query wall-latency summary from the registry histogram
+        (`engine.query_latency_ms`) — same keys as the Gateway's
+        per-turn summaries: n / p50_ms / p95_ms / p99_ms / mean_ms."""
+        return latency_summary(self._lat_hist)
 
     def summary(self) -> dict:
         out = {

@@ -56,6 +56,7 @@ from ..core.config_search import (
 )
 from ..core.pattern import Pattern
 from ..core.plan import MatchingPlan, plan_from_dict, plan_to_dict
+from ..obs import get_tracer
 
 SCHEMA_VERSION = 1
 
@@ -204,15 +205,17 @@ class PlanStore:
             "plan": plan_to_dict(plan),
             "has_executable": exec_bytes is not None,
         }
-        try:
-            if exec_bytes is not None:
-                self._atomic_write(exec_path, exec_bytes)
-            self._atomic_write(
-                json_path,
-                json.dumps(record, separators=(",", ":")).encode())
-        except OSError:
-            self.stats.save_fails += 1
-            return None
+        with get_tracer().span("store.save", digest=digest[:12],
+                               aot=exec_bytes is not None):
+            try:
+                if exec_bytes is not None:
+                    self._atomic_write(exec_path, exec_bytes)
+                self._atomic_write(
+                    json_path,
+                    json.dumps(record, separators=(",", ":")).encode())
+            except OSError:
+                self.stats.save_fails += 1
+                return None
         self.stats.saves += 1
         return digest
 
@@ -235,19 +238,27 @@ class PlanStore:
         return self._load_digest(key_digest(key))
 
     def _load_digest(self, digest: str) -> StoreRecord | None:
+        with get_tracer().span("store.load", digest=digest[:12]) as sp:
+            rec = self._load_checked(digest, sp)
+        return rec
+
+    def _load_checked(self, digest: str, sp) -> StoreRecord | None:
         json_path, exec_path = self._paths(digest)
         if not os.path.exists(json_path):
             self.stats.misses += 1
+            sp.set(outcome="miss")
             return None
         try:
             with open(json_path) as f:
                 rec = json.load(f)
         except (OSError, json.JSONDecodeError):
             self.stats.reject("corrupt")
+            sp.set(outcome="corrupt")
             return None
         reason = self._check_header(rec)
         if reason is not None:
             self.stats.reject(reason)
+            sp.set(outcome=f"stale:{reason}")
             return None
         try:
             pattern = Pattern.from_dict(rec["pattern"])
@@ -255,6 +266,7 @@ class PlanStore:
             plan = plan_from_dict(rec["plan"])
         except (KeyError, TypeError, ValueError):
             self.stats.reject("corrupt")
+            sp.set(outcome="corrupt")
             return None
         # plan_from_dict round-trips blindly by design (O(read) loads);
         # re-prove soundness here so a drifted/tampered record degrades
@@ -263,9 +275,12 @@ class PlanStore:
         from ..analysis.findings import has_errors
         from ..analysis.soundness import verify_plan
 
-        if has_errors(verify_plan(plan, mode=mode, location=digest)):
+        with get_tracer().span("store.verify", digest=digest[:12]):
+            bad = has_errors(verify_plan(plan, mode=mode, location=digest))
+        if bad:
             self.stats.verify_fails += 1
             self.stats.reject("verify")
+            sp.set(outcome="verify_fail")
             return None
         exec_bytes = None
         if rec.get("has_executable"):
@@ -278,6 +293,7 @@ class PlanStore:
                 except OSError:
                     self.stats.exec_drops += 1
         self.stats.loads += 1
+        sp.set(outcome="load", aot=exec_bytes is not None)
         return StoreRecord(
             digest=digest,
             pattern=pattern,
@@ -378,26 +394,29 @@ class PlanStore:
 
         report = {"checked": 0, "quarantined": 0, "stats_checked": 0,
                   "findings": {}}
-        for fname in sorted(os.listdir(self.vdir)):
-            if not fname.endswith(".json"):
-                continue
-            digest = fname[: -len(".json")]
-            findings: list[Finding] = []
-            if fname.startswith("stats-"):
-                report["stats_checked"] += 1
-                fp = fname[len("stats-"): -len(".json")]
-                if self.load_graph_stats(fp) is None:
-                    findings.append(Finding(
-                        ERROR, "stats-record", digest,
-                        "stats record is corrupt or its fingerprint does "
-                        "not match its filename"))
-            else:
-                report["checked"] += 1
-                findings = self._fsck_record(digest, verify_plan)
-            if has_errors(findings):
-                report["findings"][digest] = findings
-                if self._quarantine(digest):
-                    report["quarantined"] += 1
+        with get_tracer().span("store.fsck", root=self.root) as fsp:
+            for fname in sorted(os.listdir(self.vdir)):
+                if not fname.endswith(".json"):
+                    continue
+                digest = fname[: -len(".json")]
+                findings: list[Finding] = []
+                if fname.startswith("stats-"):
+                    report["stats_checked"] += 1
+                    fp = fname[len("stats-"): -len(".json")]
+                    if self.load_graph_stats(fp) is None:
+                        findings.append(Finding(
+                            ERROR, "stats-record", digest,
+                            "stats record is corrupt or its fingerprint "
+                            "does not match its filename"))
+                else:
+                    report["checked"] += 1
+                    findings = self._fsck_record(digest, verify_plan)
+                if has_errors(findings):
+                    report["findings"][digest] = findings
+                    if self._quarantine(digest):
+                        report["quarantined"] += 1
+            fsp.set(checked=report["checked"],
+                    quarantined=report["quarantined"])
         return report
 
     def _fsck_record(self, digest: str, verify_plan) -> list:

@@ -37,11 +37,11 @@ workload.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
-import numpy as np
-
+from ..obs import (
+    Histogram, MetricsRegistry, get_tracer, latency_summary, timer,
+)
 from .scheduler import RoundScheduler, Share, StepReport, Workload
 
 __all__ = [
@@ -92,10 +92,9 @@ class GraphQueryWorkload:
         return self.engine.pending() > 0
 
     def step(self, quantum: int) -> StepReport:
-        t0 = time.perf_counter()
-        resolved = self.engine.run_pending(limit=quantum)
-        return StepReport(items=len(resolved),
-                          seconds=time.perf_counter() - t0)
+        with timer() as t:
+            resolved = self.engine.run_pending(limit=quantum)
+        return StepReport(items=len(resolved), seconds=t.seconds)
 
     def results(self):
         """Resolved results in admission order (unresolved tickets are
@@ -132,23 +131,23 @@ class LMDecodeWorkload:
         return self.session.remaining > 0
 
     def step(self, quantum: int) -> StepReport:
-        t0 = time.perf_counter()
-        n = self.session.decode_steps(quantum)
-        return StepReport(items=n, seconds=time.perf_counter() - t0)
+        with timer() as t:
+            n = self.session.decode_steps(quantum)
+        return StepReport(items=n, seconds=t.seconds)
 
     def metrics(self) -> dict:
         return self.session.metrics()
 
 
-def _pcts(vals: list[float]) -> dict:
-    arr = np.asarray(vals, dtype=float)
-    if arr.size == 0:
-        return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0}
-    return {
-        "n": int(arr.size),
-        "p50_ms": float(np.percentile(arr, 50) * 1e3),
-        "p99_ms": float(np.percentile(arr, 99) * 1e3),
-    }
+def _turn_summary(per_item_seconds: list[float]) -> dict:
+    """Per-item turn latencies → the unified percentile dict (same keys
+    as `QueryEngine.latency_percentiles`; the old hand-rolled `_pcts`
+    here and the engine's numpy twin had drifted — one carried
+    `mean_ms`, the other didn't)."""
+    h = Histogram()
+    for s in per_item_seconds:
+        h.observe(s * 1e3)
+    return latency_summary(h)
 
 
 @dataclass
@@ -164,6 +163,7 @@ class Gateway:
     scheduler: RoundScheduler = field(default_factory=RoundScheduler)
     workloads: list = field(default_factory=list)
     trace: object = None
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
 
     def add(self, workload: Workload, share: Share | None = None):
         if any(w.name == workload.name for w in self.workloads):
@@ -174,17 +174,29 @@ class Gateway:
         return workload
 
     def warmup(self) -> None:
-        for w in self.workloads:
-            w.warmup()
+        with get_tracer().span("gateway.warmup",
+                               workloads=len(self.workloads)):
+            for w in self.workloads:
+                w.warmup()
 
     def run(self, *, max_rounds: int | None = None, warmup: bool = True):
         """Warm every workload, then drive scheduler rounds until all
         are drained (or `max_rounds`).  Returns the ScheduleTrace."""
-        if warmup:
-            self.warmup()
-        self.trace = self.scheduler.run(self.workloads,
-                                        max_rounds=max_rounds)
+        with get_tracer().span(
+                "gateway.run", workloads=len(self.workloads)) as sp:
+            if warmup:
+                self.warmup()
+            self.trace = self.scheduler.run(self.workloads,
+                                            max_rounds=max_rounds,
+                                            metrics=self.metrics)
+            sp.set(rounds=self.trace.rounds, turns=len(self.trace.turns))
         return self.trace
+
+    def reset_window(self) -> None:
+        """Reset the registry's measurement window — the same method the
+        engine exposes, so benchmark phases reset both tenants' windows
+        identically (and exactly once when they share a registry)."""
+        self.metrics.reset_window()
 
     def report(self) -> dict:
         """Per-workload metrics plus the interference evidence: turn
@@ -197,16 +209,15 @@ class Gateway:
             mine = [t for t in turns if t.name == w.name and t.items > 0]
             solo = [t.seconds / t.items for t in mine if not t.contended]
             cont = [t.seconds / t.items for t in mine if t.contended]
+            solo_s, cont_s = _turn_summary(solo), _turn_summary(cont)
             rep = {
                 "items": sum(t.items for t in mine),
                 "turns": len(mine),
-                "turn_item_ms": {"solo": _pcts(solo),
-                                 "contended": _pcts(cont)},
+                "turn_item_ms": {"solo": solo_s, "contended": cont_s},
                 "metrics": w.metrics(),
             }
             if solo and cont:
-                s50 = float(np.percentile(solo, 50))
-                c50 = float(np.percentile(cont, 50))
+                s50, c50 = solo_s["p50_ms"], cont_s["p50_ms"]
                 rep["interference_x"] = c50 / s50 if s50 > 0 else float("inf")
             out["workloads"][w.name] = rep
         return out

@@ -16,13 +16,15 @@ produce a known interleaving (tests/test_gateway.py), which is what
 makes the mixed-traffic acceptance runs reproducible.
 
 Nothing in this module imports JAX — `Workload` is a structural
-protocol, so the scheduler is unit-testable with scripted fakes.
+protocol, so the scheduler is unit-testable with scripted fakes
+(repro.obs is stdlib-only by the same contract).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
+
+from ..obs import get_tracer, timer
 
 
 @dataclass(frozen=True)
@@ -116,7 +118,16 @@ class RoundScheduler:
         return self.shares.get(name, self.default)
 
     def run(self, workloads: list[Workload],
-            *, max_rounds: int | None = None) -> ScheduleTrace:
+            *, max_rounds: int | None = None,
+            metrics=None) -> ScheduleTrace:
+        """Drive rounds until no workload is ready (or `max_rounds`).
+
+        With a `MetricsRegistry` passed as `metrics`, every productive
+        turn also lands in `scheduler.turn_item_ms{workload=,phase=}`
+        histograms (phase solo|contended) — the same split the Gateway
+        report derives from the trace, but windowed/resettable.
+        """
+        tr = get_tracer()
         order = sorted(
             range(len(workloads)),
             key=lambda i: (-self.share_of(workloads[i].name).priority, i),
@@ -129,21 +140,33 @@ class RoundScheduler:
                 break
             contended = len(ready) > 1
             round_items = 0
-            for i in ready:
-                w = workloads[i]
-                share = self.share_of(w.name)
-                for _ in range(max(share.weight, 1)):
-                    if not w.ready():
-                        break
-                    t0 = time.perf_counter()
-                    rep = w.step(max(share.quantum, 1))
-                    dt = time.perf_counter() - t0
-                    round_items += rep.items
-                    trace.turns.append(Turn(
-                        round=rnd, name=w.name, items=rep.items,
-                        seconds=rep.seconds if rep.seconds > 0 else dt,
-                        contended=contended,
-                    ))
+            with tr.span("scheduler.round", round=rnd,
+                         ready=len(ready)) as rsp:
+                for i in ready:
+                    w = workloads[i]
+                    share = self.share_of(w.name)
+                    for _ in range(max(share.weight, 1)):
+                        if not w.ready():
+                            break
+                        with tr.span("scheduler.turn", workload=w.name,
+                                     round=rnd,
+                                     contended=contended) as tsp, \
+                                timer() as t:
+                            rep = w.step(max(share.quantum, 1))
+                            tsp.set(items=rep.items)
+                        dt = t.seconds
+                        round_items += rep.items
+                        seconds = rep.seconds if rep.seconds > 0 else dt
+                        trace.turns.append(Turn(
+                            round=rnd, name=w.name, items=rep.items,
+                            seconds=seconds, contended=contended,
+                        ))
+                        if metrics is not None and rep.items > 0:
+                            metrics.histogram(
+                                "scheduler.turn_item_ms", workload=w.name,
+                                phase="contended" if contended else "solo",
+                            ).observe(seconds / rep.items * 1e3)
+                rsp.set(items=round_items)
             rnd += 1
             if round_items == 0:
                 # every ready workload declined to make progress — a

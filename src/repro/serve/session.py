@@ -25,11 +25,11 @@ already applied, so resumed decoding continues at position S + k.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import get_tracer, timer
 
 
 def fake_prompts(cfg, B, S, key):
@@ -119,10 +119,16 @@ class LMSession:
 
         key = jax.random.PRNGKey(self.seed)
         with set_mesh(self.mesh):
-            self._params = jax.jit(lambda k: T.init(self.cfg, k))(key)
-            self._decode, _, c_sh, self._cache_shape = make_decode(
-                self.cfg, self.mesh, batch=self.B, max_seq=self.max_seq
-            )
+            # param init + decode-program build dominate cold start; a
+            # leaf span keeps warmup time attributable in traces
+            with get_tracer().span("lm.init", arch=self.arch,
+                                   batch=self.B):
+                self._params = jax.block_until_ready(
+                    jax.jit(lambda k: T.init(self.cfg, k))(key))
+                self._decode, _, c_sh, self._cache_shape = make_decode(
+                    self.cfg, self.mesh, batch=self.B,
+                    max_seq=self.max_seq
+                )
             restored = self._try_restore() if resume else None
             if restored is None:
                 self._prefill(key, c_sh)
@@ -136,19 +142,26 @@ class LMSession:
         from ..models import transformer as T
         from .serve_step import make_prefill
 
-        shape = ShapeConfig("serve", self.S, self.B, "prefill")
-        batch = fake_prompts(self.cfg, self.B, self.S, key)
-        prefill, _, _ = make_prefill(
-            self.cfg, self.mesh, input_specs(self.cfg, shape), q_chunk=0)
-        t0 = time.perf_counter()
-        logits, prefill_cache = jax.block_until_ready(
-            prefill(self._params, batch))
-        self.prefill_seconds = time.perf_counter() - t0
-        cache = jax.jit(
-            lambda: T.init_cache(self.cfg, self.B, self.max_seq),
-            out_shardings=c_sh,
-        )()
-        self._cache = seed_cache(cache, prefill_cache, self.S)
+        with get_tracer().span("lm.build", batch=self.B,
+                               prompt_len=self.S):
+            shape = ShapeConfig("serve", self.S, self.B, "prefill")
+            batch = fake_prompts(self.cfg, self.B, self.S, key)
+            prefill, _, _ = make_prefill(
+                self.cfg, self.mesh, input_specs(self.cfg, shape),
+                q_chunk=0)
+        with get_tracer().span("lm.prefill", arch=self.arch, batch=self.B,
+                               prompt_len=self.S), timer() as t:
+            logits, prefill_cache = jax.block_until_ready(
+                prefill(self._params, batch))
+        self.prefill_seconds = t.seconds
+        with get_tracer().span("lm.cache_init", batch=self.B,
+                               max_seq=self.max_seq):
+            cache = jax.jit(
+                lambda: T.init_cache(self.cfg, self.B, self.max_seq),
+                out_shardings=c_sh,
+            )()
+            self._cache = jax.block_until_ready(
+                seed_cache(cache, prefill_cache, self.S))
         self._tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         self._generated = [np.asarray(self._tokens)]
 
@@ -190,23 +203,25 @@ class LMSession:
         n = min(max(k, 0), self.remaining)
         if n == 0:
             return 0
-        t0 = time.perf_counter()
-        with set_mesh(self.mesh):
-            for _ in range(n):
-                i = self.step_i
-                pos = jnp.asarray(self.S + i, jnp.int32)
-                logits, self._cache = self._decode(
-                    self._params, self._tokens, self._cache, pos)
-                self._tokens = jnp.argmax(
-                    logits, axis=-1).astype(jnp.int32)[:, None]
-                self._generated.append(np.asarray(self._tokens))
-                self.step_i = i + 1
-                if (self.ckpt_dir and self.ckpt_every
-                        and self.step_i % self.ckpt_every == 0):
-                    ckpt.save(self.ckpt_dir, self.step_i,
-                              {"cache": self._cache, "tokens": self._tokens})
-            jax.block_until_ready(self._tokens)
-        self.decode_seconds += time.perf_counter() - t0
+        with get_tracer().span("lm.decode", arch=self.arch, steps=n,
+                               at_step=self.step_i), timer() as t:
+            with set_mesh(self.mesh):
+                for _ in range(n):
+                    i = self.step_i
+                    pos = jnp.asarray(self.S + i, jnp.int32)
+                    logits, self._cache = self._decode(
+                        self._params, self._tokens, self._cache, pos)
+                    self._tokens = jnp.argmax(
+                        logits, axis=-1).astype(jnp.int32)[:, None]
+                    self._generated.append(np.asarray(self._tokens))
+                    self.step_i = i + 1
+                    if (self.ckpt_dir and self.ckpt_every
+                            and self.step_i % self.ckpt_every == 0):
+                        ckpt.save(
+                            self.ckpt_dir, self.step_i,
+                            {"cache": self._cache, "tokens": self._tokens})
+                jax.block_until_ready(self._tokens)
+        self.decode_seconds += t.seconds
         return n
 
     # ----------------------------------------------------------- reporting

@@ -226,9 +226,20 @@ def test_lint_scheduler_rules():
     assert "scheduler-no-jax" not in rules_elsewhere
 
 
-def test_lint_perf_counter_allowed():
+def test_lint_no_raw_timing():
     src = "import time\ndef t():\n    return time.perf_counter()\n"
-    assert not lint_source(src, "serve/scheduler.py")
+    # serve/ and query/ must route timing through repro.obs ...
+    for rel in ("serve/scheduler.py", "query/engine.py",
+                "src/repro/serve/gateway.py"):
+        f = lint_source(src, rel)
+        assert {x.rule for x in f} == {"no-raw-timing"}, rel
+    # ... in every spelling
+    f = lint_source("from time import monotonic, sleep\n",
+                    "serve/gateway.py")
+    assert [x.rule for x in f] == ["no-raw-timing"]   # sleep not flagged
+    # obs/ is the sanctioned home; other layers keep their own clocks
+    assert not lint_source(src, "src/repro/obs/trace.py")
+    assert not lint_source(src, "core/config_search.py")
 
 
 def test_lint_compat_only_drift():
