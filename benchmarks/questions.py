@@ -1,0 +1,256 @@
+"""Ground-truth question benchmark: labeled pattern matching as QA.
+
+A property graph plus a typed pattern query is a *question* with one
+objectively right answer ("how many manager→engineer→manager chains?"),
+and the brute-force oracle can state that answer independently of every
+plan-time and executor-path decision under test.  This module fixes a
+generated labeled graph (`tiny-labeled`, 4 label classes) and a
+~54-question inventory — typed multi-hop joins, labeled triangles and
+cliques, star-with-role queries, wildcard mixes — answers each question
+through the real pipeline (canonicalization → configuration search →
+label-aware plan → executor) on BOTH executor paths, and scores the
+answers against the oracle.
+
+`tests/test_questions.py` gates tier-1 on 100% agreement over the full
+inventory; here the same inventory doubles as a throughput benchmark
+(questions/s per path) and the accuracy row makes any disagreement an
+artifact-visible failure (`run()` raises, so `scripts/bench_smoke.sh`
+fails loudly rather than persisting a wrong-answer artifact).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.config_search import search_configuration
+from repro.core.executor import ExecutorConfig, Matcher, device_graph
+from repro.core.oracle import count_embeddings_oracle
+from repro.core.pattern import Pattern
+from repro.query.canon import canonical_form
+
+from ._util import Row, emit, graph_of, stats_of
+
+DATASET = "tiny-labeled"        # 256 vertices, 4 label classes (0..3)
+CAPACITY = 1 << 12
+
+Label = int | None
+
+
+def _edge(a: Label, b: Label) -> Pattern:
+    return Pattern(2, ((0, 1),), labels=(a, b))
+
+
+def _path(labs: tuple[Label, ...]) -> Pattern:
+    n = len(labs)
+    return Pattern(n, tuple((i, i + 1) for i in range(n - 1)), labels=labs)
+
+
+def _tri(labs: tuple[Label, Label, Label]) -> Pattern:
+    return Pattern(3, ((0, 1), (1, 2), (0, 2)), labels=labs)
+
+
+def _star(center: Label, leaves: tuple[Label, ...]) -> Pattern:
+    n = 1 + len(leaves)
+    return Pattern(n, tuple((0, i) for i in range(1, n)),
+                   labels=(center,) + leaves)
+
+
+def _cycle4(labs: tuple[Label, ...]) -> Pattern:
+    return Pattern(4, ((0, 1), (1, 2), (2, 3), (0, 3)), labels=labs)
+
+
+def _clique4(labs: tuple[Label, ...]) -> Pattern:
+    return Pattern(4, ((0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)),
+                   labels=labs)
+
+
+def _tailed_tri(labs: tuple[Label, ...]) -> Pattern:
+    """Triangle 0-1-2 with pendant 3 hanging off vertex 0."""
+    return Pattern(4, ((0, 1), (1, 2), (0, 2), (0, 3)), labels=labs)
+
+
+@dataclass(frozen=True)
+class Question:
+    qid: str
+    text: str                   # the human phrasing of the question
+    category: str
+    pattern: Pattern
+
+
+def _lab(x: Label) -> str:
+    return "*" if x is None else f"L{x}"
+
+
+def inventory() -> list[Question]:
+    """The full question inventory (deterministic order and qids)."""
+    qs: list[Question] = []
+
+    def add(category: str, text: str, pattern: Pattern) -> None:
+        qs.append(Question(f"q{len(qs):02d}", text, category, pattern))
+
+    # --- typed joins: how many (a)-(b) edges? -------------------------
+    for a, b in [(0, 0), (0, 1), (0, 2), (0, 3), (1, 1),
+                 (1, 2), (1, 3), (2, 2), (2, 3), (3, 3)]:
+        add("typed-edge",
+            f"how many {_lab(a)}—{_lab(b)} edges?", _edge(a, b))
+    for a in (0, 2):
+        add("typed-edge",
+            f"how many edges touch a {_lab(a)} vertex?", _edge(a, None))
+
+    # --- labeled triangles -------------------------------------------
+    for labs in [(0, 0, 0), (1, 1, 1), (2, 2, 2), (3, 3, 3),
+                 (0, 0, 1), (0, 1, 1), (0, 1, 2), (0, 1, 3),
+                 (1, 2, 3), (2, 2, 3)]:
+        add("labeled-triangle",
+            "how many triangles typed "
+            f"{_lab(labs[0])}-{_lab(labs[1])}-{_lab(labs[2])}?", _tri(labs))
+    for labs in [(0, None, None), (None, None, 2), (1, None, 3)]:
+        add("labeled-triangle",
+            "how many triangles with role slots "
+            f"{_lab(labs[0])}-{_lab(labs[1])}-{_lab(labs[2])}?", _tri(labs))
+
+    # --- typed multi-hop joins (paths) -------------------------------
+    for labs in [(0, 1, 0), (0, 1, 2), (1, 0, 1),
+                 (2, 3, 2), (0, None, 1), (3, 1, 3)]:
+        add("typed-path",
+            "how many 2-hop chains "
+            + "→".join(_lab(x) for x in labs) + "?", _path(labs))
+    for labs in [(0, 1, 1, 0), (0, 1, 2, 3), (1, 2, 2, 1),
+                 (0, None, None, 3), (2, 1, 1, 2)]:
+        add("typed-path",
+            "how many 3-hop chains "
+            + "→".join(_lab(x) for x in labs) + "?", _path(labs))
+
+    # --- stars with role constraints ---------------------------------
+    for center, leaves in [(0, (1, 1, 2)), (2, (0, 1, 3)), (1, (3, 3, 3)),
+                           (3, (0, 0, 0)), (None, (1, 2, 3)),
+                           (0, (None, 1, 2))]:
+        add("star-role",
+            f"how many {_lab(center)} hubs with role set "
+            "{" + ",".join(_lab(x) for x in leaves) + "}?",
+            _star(center, leaves))
+
+    # --- labeled rectangles (4-cycles) -------------------------------
+    for labs in [(0, 1, 0, 1), (0, 1, 2, 3), (2, 2, 3, 3),
+                 (0, None, 0, None), (1, 1, 1, 1)]:
+        add("labeled-rectangle",
+            "how many 4-cycles typed "
+            + "-".join(_lab(x) for x in labs) + "?", _cycle4(labs))
+
+    # --- labeled cliques ---------------------------------------------
+    for labs in [(0, 1, 2, 3), (0, 0, 1, 1), (1, 1, 1, 1),
+                 (None, 0, 1, 2)]:
+        add("labeled-clique",
+            "how many K4 cliques typed "
+            + "-".join(_lab(x) for x in labs) + "?", _clique4(labs))
+
+    # --- tailed triangles (triangle + pendant role) ------------------
+    for labs in [(0, 1, 2, 3), (1, 1, 1, 0), (2, None, 2, 0)]:
+        add("tailed-triangle",
+            "how many triangles "
+            f"{_lab(labs[0])}-{_lab(labs[1])}-{_lab(labs[2])} with a "
+            f"{_lab(labs[3])} pendant on the first vertex?",
+            _tailed_tri(labs))
+
+    return qs
+
+
+def oracle_answers(graph, questions: list[Question]) -> dict[str, int]:
+    """Ground truth per qid, brute-forced independently of the pipeline."""
+    edges = graph.edge_array()
+    return {
+        q.qid: count_embeddings_oracle(graph.n, edges, q.pattern,
+                                       labels=graph.labels)
+        for q in questions
+    }
+
+
+def machine_answers(
+    graph, questions: list[Question], *, use_pallas: bool,
+    capacity: int = CAPACITY, stats=None, arrays=None,
+) -> tuple[dict[str, int], float]:
+    """(answers, seconds) through the real pipeline on one executor path.
+
+    Every question pays canonicalization, the configuration search, a
+    label-aware plan build, and a fresh executor trace — the full cold
+    path — so an agreement failure localizes to the pipeline, not to a
+    shared shortcut.  Device arrays are shared across questions (the
+    graph does not change between questions)."""
+    if stats is None:
+        stats = stats_of(DATASET)
+    if arrays is None:
+        arrays = device_graph(graph)
+    cfg = ExecutorConfig(capacity=capacity, use_pallas=use_pallas)
+    answers: dict[str, int] = {}
+    t0 = time.perf_counter()
+    for q in questions:
+        canon = canonical_form(q.pattern)
+        best = search_configuration(canon, stats).best
+        from repro.core.plan import build_plan
+
+        plan = build_plan(canon, best.order, best.res_set, iep_k=best.iep_k)
+        m = Matcher(graph, plan, cfg, arrays=arrays)
+        out = m.count()
+        assert not out.overflowed, f"{q.qid}: overflow at capacity {capacity}"
+        answers[q.qid] = int(out.count)
+        m.release()
+    return answers, time.perf_counter() - t0
+
+
+def run(full: bool = False) -> list[Row]:
+    graph = graph_of(DATASET)
+    questions = inventory()
+    t0 = time.perf_counter()
+    truth = oracle_answers(graph, questions)
+    oracle_s = time.perf_counter() - t0
+    # an inventory that mostly asks about empty classes would "pass"
+    # while validating nothing — demand real mass behind the questions
+    nonzero = sum(1 for v in truth.values() if v > 0)
+    assert nonzero >= len(questions) * 3 // 5, (
+        f"only {nonzero}/{len(questions)} questions have nonzero answers")
+
+    arrays = device_graph(graph)
+    stats = stats_of(DATASET)
+    rows: list[Row] = []
+    keys = {"dataset": DATASET, "questions": len(questions)}
+    for path, use_pallas in (("portable", False), ("fused", True)):
+        answers, dt = machine_answers(
+            graph, questions, use_pallas=use_pallas, stats=stats,
+            arrays=arrays)
+        wrong = {q.qid: (answers[q.qid], truth[q.qid])
+                 for q in questions if answers[q.qid] != truth[q.qid]}
+        by_cat: dict[str, list[bool]] = {}
+        for q in questions:
+            by_cat.setdefault(q.category, []).append(
+                answers[q.qid] == truth[q.qid])
+        for cat, oks in sorted(by_cat.items()):
+            rows.append(Row("questions",
+                            {**keys, "path": path, "category": cat},
+                            sum(oks) / len(oks), "accuracy",
+                            {"n": len(oks)}))
+        rows.append(Row("questions", {**keys, "path": path},
+                        (len(questions) - len(wrong)) / len(questions),
+                        "accuracy",
+                        {"wrong": {k: {"got": g, "want": w}
+                                   for k, (g, w) in wrong.items()},
+                         "nonzero_truth": nonzero}))
+        rows.append(Row("questions",
+                        {**keys, "path": path, "phase": "throughput"},
+                        len(questions) / dt, "questions/s",
+                        {"oracle_s": oracle_s}))
+        if wrong:
+            # never persist a pretty artifact over wrong answers
+            raise AssertionError(
+                f"{path} path disagrees with the oracle on "
+                f"{len(wrong)} question(s): {wrong}")
+    return rows
+
+
+def main(full: bool = False):
+    emit(run(full), "questions")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

@@ -24,6 +24,7 @@ from . import (
     gateway_mix,
     kernel_intersect,
     query_throughput,
+    questions,
     tab2_restrictions,
     tab3_overhead,
 )
@@ -40,6 +41,7 @@ BENCHES = {
     "kernel": kernel_intersect.main, # Pallas intersection kernel
     "query": query_throughput.main,  # serve path: cold vs warm queries/s
     "gateway": gateway_mix.main,     # mixed graph+LM: coalescing/interference
+    "questions": questions.main,     # labeled QA: oracle accuracy + q/s
 }
 
 

@@ -65,6 +65,46 @@ if not snap:
 print(f"bench_smoke OK: metrics snapshot has {len(snap)} keys")
 EOF
 
+# Ground-truth question benchmark: the labeled inventory answered on
+# both executor paths and scored against the brute-force oracle.  The
+# benchmark itself raises on ANY oracle disagreement; the gate below
+# additionally pins 100% accuracy in the persisted artifact and fails
+# on a hollow inventory (fewer questions than the tier-1 floor).
+python -m benchmarks.run --only questions
+
+python - <<'EOF'
+import json
+import os
+import shutil
+import sys
+
+path = os.path.join(os.environ["REPRO_BENCH_OUT"], "questions.json")
+rows = json.load(open(path))
+fail = []
+acc = {r["keys"]["path"]: r for r in rows
+       if "category" not in r["keys"] and "phase" not in r["keys"]}
+for p in ("portable", "fused"):
+    if p not in acc:
+        fail.append(f"missing {p!r} accuracy row in {path}")
+    elif acc[p]["value"] != 1.0:
+        fail.append(f"{p} accuracy is {acc[p]['value']}, want 1.0: "
+                    f"{acc[p]['extra'].get('wrong')}")
+    elif acc[p]["keys"]["questions"] < 50:
+        fail.append(f"only {acc[p]['keys']['questions']} questions "
+                    f"(inventory floor is 50)")
+if fail:
+    print("bench_smoke FAILED:", file=sys.stderr)
+    for f in fail:
+        print(f"  - {f}", file=sys.stderr)
+    sys.exit(1)
+# persist the gated snapshot under its stable artifact name
+dst = os.path.join(os.environ["REPRO_BENCH_OUT"], "BENCH_questions.json")
+shutil.copyfile(path, dst)
+n = acc["portable"]["keys"]["questions"]
+print(f"bench_smoke OK: {n} questions, 100% oracle agreement on both "
+      f"paths -> {dst}")
+EOF
+
 # Store hygiene ride-along: warm a plan store exactly the way a serving
 # replica would, then fsck it — every record written this run must still
 # verify (a non-empty quarantine fails the smoke).

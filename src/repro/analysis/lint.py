@@ -38,6 +38,20 @@ Five rule classes over `src/repro`:
                           time — or worse, silently constant-fold a
                           weak type.  Static-shape reads
                           (`int(x.shape[0])`, `len(...)`) are allowed.
+  label-coverage          every identity/serialization surface that two
+                          label variants of one skeleton could alias
+                          through must keep referencing the labels
+                          field: `canonical_key` + `_wl_cells`
+                          (query/canon.py), `Pattern.to_dict` +
+                          `_automorphisms_cached` (core/pattern.py),
+                          `plan_to_dict` (core/plan.py, vlabels),
+                          `fingerprint` (graph/csr.py), and the store's
+                          `_record_labeled`.  A refactor that drops
+                          labels from any of them would silently merge
+                          a labeled pattern with its skeleton — cache
+                          aliasing that no runtime check catches —
+                          so the lint fails if the function loses its
+                          labels reference OR disappears outright.
 
 Pure `ast` — no imports of the linted modules, so a module that fails
 to import is still lintable (and a syntax error becomes a finding).
@@ -81,6 +95,20 @@ _RAW_TIMING_NAMES = {
     "process_time", "process_time_ns",
 }
 _RAW_TIMING_ATTRS = {f"time.{n}" for n in _RAW_TIMING_NAMES}
+
+# label-coverage: (path suffix) -> {function name: required token}.
+# Each named function is an identity or serialization surface; losing
+# its labels/vlabels reference would alias labeled patterns with their
+# unlabeled skeletons somewhere downstream (cache keys, store records,
+# graph fingerprints, automorphism groups).
+_LABEL_SURFACES: dict[str, dict[str, str]] = {
+    "core/pattern.py": {"to_dict": "labels",
+                        "_automorphisms_cached": "labels"},
+    "query/canon.py": {"canonical_key": "labels", "_wl_cells": "labels"},
+    "core/plan.py": {"plan_to_dict": "vlabels"},
+    "graph/csr.py": {"fingerprint": "labels"},
+    "query/store.py": {"_record_labeled": "vlabels"},
+}
 
 
 def _in_timed_scope(rel: str) -> bool:
@@ -161,6 +189,47 @@ def _check_traced_body(fn, rel: str) -> list[Finding]:
     return out
 
 
+def _references_token(fn: ast.AST, token: str) -> bool:
+    """Does the function body mention `token` as an attribute, name, or
+    string literal (dict key)?"""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == token:
+            return True
+        if isinstance(node, ast.Name) and node.id == token:
+            return True
+        if isinstance(node, ast.Constant) and node.value == token:
+            return True
+        if isinstance(node, ast.keyword) and node.arg == token:
+            return True
+    return False
+
+
+def _check_label_surfaces(tree: ast.Module, rel: str,
+                          surfaces: dict[str, str]) -> list[Finding]:
+    found: set[str] = set()
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        token = surfaces.get(node.name)
+        if token is None:
+            continue
+        found.add(node.name)
+        if not _references_token(node, token):
+            out.append(_err(
+                "label-coverage", f"{rel}:{node.lineno}",
+                f"{node.name}() no longer references {token!r}: labeled "
+                f"patterns would alias their unlabeled skeletons through "
+                f"this identity/serialization surface"))
+    for name in sorted(set(surfaces) - found):
+        out.append(_err(
+            "label-coverage", rel,
+            f"expected label-carrying function {name}() not found; if it "
+            f"was renamed, update _LABEL_SURFACES to keep the labels "
+            f"field pinned to the new surface"))
+    return out
+
+
 def lint_source(src: str, rel: str) -> list[Finding]:
     """Lint one module's source; `rel` is the repo-relative path used in
     finding locations and to select per-file rules."""
@@ -169,10 +238,14 @@ def lint_source(src: str, rel: str) -> list[Finding]:
     except SyntaxError as e:
         return [_err("syntax", f"{rel}:{e.lineno or 0}", f"does not parse: {e.msg}")]
 
-    is_scheduler = rel.replace("\\", "/").endswith("serve/scheduler.py")
-    is_compat = rel.replace("\\", "/").endswith("repro/compat.py")
+    posix = rel.replace("\\", "/")
+    is_scheduler = posix.endswith("serve/scheduler.py")
+    is_compat = posix.endswith("repro/compat.py")
     is_timed = _in_timed_scope(rel)
     out: list[Finding] = []
+    for suffix, surfaces in _LABEL_SURFACES.items():
+        if posix.endswith(suffix):
+            out += _check_label_surfaces(tree, rel, surfaces)
 
     for node in ast.walk(tree):
         loc = f"{rel}:{getattr(node, 'lineno', 0)}"

@@ -289,7 +289,11 @@ def verify_plan(plan, *, mode: str = "graphpi",
             "plan-rebuild", loc,
             f"build_plan rejects the plan's own inputs: {e}"))
         return out
-    for field in ("preds", "neqs", "restr", "iep", "iep_divisor"):
+    # vlabels is derived too: it must be the pattern's labels permuted to
+    # schedule order — a record whose labels and vlabels disagree serves
+    # a different typed query than its key claims
+    for field in ("preds", "neqs", "restr", "iep", "iep_divisor",
+                  "vlabels"):
         want = getattr(rebuilt, field)
         got = getattr(plan, field)
         if got != want:

@@ -14,6 +14,11 @@ TPU-native adaptation of GraphPi's nested-loop DFS (DESIGN.md §3):
    kernel pass over the candidate matrix; the portable path is a
    vectorized binary search over flat CSR segments plus XLA masks;
  * compaction is a cumsum scatter (stream compaction);
+ * labeled plans prune candidates BEFORE membership: the window is
+   gathered from the base predecessor's per-label CSR segment
+   (graph.label_view), so only same-label candidates ever reach the
+   membership intersection — identically on the portable and fused
+   paths, which share the gather and differ only in membership;
  * the IEP tail is evaluated in closed form per surviving prefix;
  * distribution = `shard_map` over the mesh `data` axis with the paper's
    fine-grained outer-loop task striping (device d owns tasks d, d+P, ...).
@@ -26,7 +31,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, replace
 from functools import partial
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -164,7 +169,10 @@ class CountResult:
 # --------------------------------------------------------------------------
 def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
                    cfg: ExecutorConfig, *, level_cb=None):
-    """Returns count(indptr, degrees, flat, v0) -> (count i64, needed i32).
+    """Returns count(indptr, degrees, flat, v0) -> (count i64, needed i32)
+    — or, for labeled plans, count(indptr, degrees, flat, labs, v0) where
+    `labs` = (vlabels [n+1], lab_starts [n+1, L], lab_lens [n+1, L],
+    lab_flat) are the device per-label CSR views (see `device_graph`).
 
     `W` = candidate-window width (graph max degree), static.
     `degrees` must be padded to [n+1] with 0 at index n (sentinel).
@@ -181,6 +189,8 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
     depth = plan.depth
     C = cfg.capacity
     use_pallas = cfg.resolve_use_pallas()
+    # Static per-position label requirements (None = wildcard / unlabeled).
+    vlabels = plan.vlabels or (None,) * n
 
     # Normalized bucket layout; None collapses to the degenerate single
     # max-degree window so there is exactly ONE expansion path.
@@ -192,18 +202,40 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
     else:
         buckets = ((W, 1.0),)
 
-    def gather_window(flat, indptr, degrees, base, width):
+    def gather_window(flat, indptr, degrees, base, width, *, labs=None,
+                      label=None):
+        """Candidate window at `base`.  With a `label` requirement the
+        window comes from the base row's per-label segment (lab_flat is
+        grouped by destination label, each segment sorted by id), so the
+        label mask is applied by construction BEFORE any membership test
+        — the rows that reach the intersection kernels are already
+        label-pruned."""
+        if label is not None:
+            _, lab_starts, lab_lens, lab_flat = labs
+            start = lab_starts[base, label]
+            cand = lab_flat[start[:, None]
+                            + jnp.arange(width, dtype=start.dtype)[None, :]]
+            ok = jnp.arange(width)[None, :] < lab_lens[base, label][:, None]
+            return cand, ok
         start = indptr[base]
         cand = flat[start[:, None]
                     + jnp.arange(width, dtype=start.dtype)[None, :]]
         ok = jnp.arange(width)[None, :] < degrees[base][:, None]
         return cand, ok
 
-    def pick_base(emb, degrees, preds):
+    def base_degrees(degrees, pv, *, labs=None, label=None):
+        """Candidate-set size per predecessor: the full degree, or the
+        per-label segment length when the target position is labeled."""
+        if label is not None:
+            _, _, lab_lens, _ = labs
+            return lab_lens[pv, label]
+        return degrees[pv]
+
+    def pick_base(emb, degrees, preds, *, labs=None, label=None):
         pv = emb[:, jnp.asarray(preds)]            # [C, P]
         if not cfg.dynamic_base or len(preds) == 1:
             return pv[:, -1]
-        dg = degrees[pv]
+        dg = base_degrees(degrees, pv, labs=labs, label=label)
         sel = jnp.argmin(dg, axis=1)
         return jnp.take_along_axis(pv, sel[:, None], axis=1)[:, 0]
 
@@ -213,7 +245,8 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
         return tuple(plan.restr[i]) + tuple((j, 0) for j in plan.neqs[i])
 
     def expand_core(emb, base, valid, preds, extras,
-                    indptr, degrees, flat, width, *, want_counts=False):
+                    indptr, degrees, flat, width, *, want_counts=False,
+                    labs=None, label=None):
         """THE per-level admissibility core (shared by every path).
 
         Gathers the candidate window at `base`, tests membership in
@@ -229,8 +262,13 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
         mask pass per predecessor, restriction, and != constraint.  The
         base's own membership test is redundant but keeps the kernel
         branch-free under the dynamic-base selection.
+
+        Labeled positions change ONLY the gather (per-label segment of
+        the base row); membership keeps walking the plain sorted rows on
+        both paths, so portable and fused stay bit-identical.
         """
-        cand, ok = gather_window(flat, indptr, degrees, base, width)
+        cand, ok = gather_window(flat, indptr, degrees, base, width,
+                                 labs=labs, label=label)
         mask = ok & valid[:, None]
         if use_pallas and len(preds) > 1:
             from ..kernels.ops import level_expand
@@ -294,15 +332,17 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
             yield bi, w, cap, lo, bi == len(buckets) - 1
             lo = w
 
-    def expand_level(i, emb, valid, needed, indptr, degrees, flat):
+    def expand_level(i, emb, valid, needed, indptr, degrees, flat,
+                     labs=None):
         """One level of frontier expansion over the bucket layout.
 
         Returns (new_emb, new_valid, needed) — or, at the last
         enumeration level, (count_contribution, None, needed)."""
         preds = plan.preds[i]
         extras = level_extras(i)
-        base_all = pick_base(emb, degrees, preds)
-        db = degrees[base_all]
+        label = vlabels[i]
+        base_all = pick_base(emb, degrees, preds, labs=labs, label=label)
+        db = base_degrees(degrees, base_all, labs=labs, label=label)
         last_enum = (plan.iep is None) and (i == n - 1)
         parent = jnp.zeros((C + 1,), dtype=jnp.int32)
         newcol = jnp.zeros((C + 1,), dtype=jnp.int32)
@@ -320,12 +360,14 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
                 cnts = expand_core(
                     sub_emb, sub_base, sub_valid, preds, extras,
                     indptr, degrees, flat, width, want_counts=True,
+                    labs=labs, label=label,
                 )
                 total_cnt += jnp.sum(cnts, dtype=jnp.int64)
                 continue
             cand, mask = expand_core(
                 sub_emb, sub_base, sub_valid, preds, extras,
                 indptr, degrees, flat, width,
+                labs=labs, label=label,
             )
             # stream-compact surviving (row, cand) pairs behind `offset`
             flat_mask = mask.reshape(-1)
@@ -425,9 +467,14 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
             val = val + term
         return jnp.where(valid, val, 0), needed_extra
 
-    def count(indptr, degrees, flat, v0):
+    def count_impl(indptr, degrees, flat, labs, v0):
         emb = v0[:, None].astype(jnp.int32)                    # [T, 1]
         valid = v0 < (indptr.shape[0] - 1)
+        if vlabels[0] is not None:
+            # root label mask: v0 is padded with the sentinel n, and the
+            # device vlabels array carries -1 there, so sentinels never
+            # match a real label
+            valid &= labs[0][v0] == vlabels[0]
         # pad/crop the initial frontier to capacity C
         T = emb.shape[0]
         if T < C:
@@ -436,7 +483,7 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
         needed = jnp.asarray(T, dtype=jnp.int32)
         for i in range(1, depth):
             thunk = partial(expand_level, i, emb, valid, needed,
-                            indptr, degrees, flat)
+                            indptr, degrees, flat, labs)
             out, new_valid, needed = (
                 thunk() if level_cb is None else level_cb(i, thunk))
             if new_valid is None:          # last enumeration level
@@ -450,13 +497,34 @@ def _make_count_fn(plan: MatchingPlan, W: int, iters: int,
                        else level_cb("iep", iep_thunk))
         return jnp.sum(vals), jnp.maximum(needed, need2)
 
-    return count
+    if plan.vlabels is None:
+        # unlabeled plans keep the historical 4-arg signature (AOT blobs,
+        # shard_map specs, dryrun all depend on it)
+        def count(indptr, degrees, flat, v0):
+            return count_impl(indptr, degrees, flat, None, v0)
+        return count
+
+    def count_labeled(indptr, degrees, flat, labs, v0):
+        return count_impl(indptr, degrees, flat, labs, v0)
+    return count_labeled
 
 
 # --------------------------------------------------------------------------
 # public host-side drivers
 # --------------------------------------------------------------------------
-def device_graph(graph: GraphCSR):
+class DeviceGraph(NamedTuple):
+    """Resident device arrays for one graph.  The first three fields are
+    the historical (indptr, padded degrees, flat) triple; `labs` is the
+    per-label view pytree (vlabels, lab_starts, lab_lens, lab_flat) for
+    labeled graphs, or None."""
+
+    indptr: object
+    degrees: object
+    flat: object
+    labs: object = None
+
+
+def device_graph(graph: GraphCSR) -> DeviceGraph:
     """Upload one graph to device memory (indptr, padded degrees, flat).
 
     Matchers accept the returned tuple via ``arrays=`` so long-lived
@@ -467,7 +535,14 @@ def device_graph(graph: GraphCSR):
     sentinels so the fused kernel's in-grid window DMAs (bounded by the
     row-extent + DMA-skip invariant — DESIGN.md §4) stay in bounds;
     every kernel call then passes ``flat_padded=True`` instead of
-    re-padding the resident graph per call."""
+    re-padding the resident graph per call.
+
+    Labeled graphs additionally upload the per-label CSR view: vlabels
+    padded to [n+1] with -1 (the frontier's sentinel root n never
+    matches a label), lab_starts/lab_lens padded with an all-empty row n
+    for the same reason.  lab_flat only ever feeds host-side gathers —
+    never the kernel's DMAs — so it needs no extra sentinel pad beyond
+    the max-degree pad the CSR build already applies."""
     from ..kernels.ops import flat_gather_pad
 
     degrees = np.concatenate([graph.degrees, np.zeros(1, dtype=np.int32)])
@@ -475,11 +550,33 @@ def device_graph(graph: GraphCSR):
         graph.indices,
         np.full(flat_gather_pad(), np.iinfo(np.int32).max, dtype=np.int32),
     ])
-    return (
+    labs = None
+    if graph.labels is not None:
+        lv = graph.label_view
+        L = graph.n_labels
+        vlabels = np.concatenate(
+            [graph.labels, np.full(1, -1, dtype=np.int32)])
+        lab_starts = np.concatenate(
+            [lv.starts, np.zeros((1, L), dtype=np.int32)])
+        lab_lens = np.concatenate(
+            [lv.lens, np.zeros((1, L), dtype=np.int32)])
+        labs = (
+            jnp.asarray(vlabels),
+            jnp.asarray(lab_starts),
+            jnp.asarray(lab_lens),
+            jnp.asarray(lv.flat),
+        )
+    return DeviceGraph(
         jnp.asarray(graph.indptr),
         jnp.asarray(degrees),
         jnp.asarray(flat),
+        labs,
     )
+
+
+def _labs_of(arrays):
+    """Label-view pytree of a DeviceGraph (None for legacy 3-tuples)."""
+    return arrays[3] if len(arrays) > 3 else None
 
 
 class Matcher:
@@ -500,7 +597,20 @@ class Matcher:
         self._fns: dict[int, object] = {}     # capacity -> jitted count_fn
         self._traced_fns: dict[int, object] = {}  # eager --trace-sync twins
         self._arrays = arrays if arrays is not None else device_graph(graph)
+        self._labeled = plan.vlabels is not None
+        if self._labeled and _labs_of(self._arrays) is None:
+            raise ValueError(
+                f"labeled pattern {plan.pattern.name!r} cannot run against "
+                f"unlabeled graph {graph.name!r}")
         self._capacity = self.cfg.capacity    # sticky escalated capacity
+
+    def _call_args(self):
+        """Positional args ahead of v0 — labeled plans append the label
+        views so the jitted signature matches _make_count_fn."""
+        indptr, degrees, flat = self._arrays[:3]
+        if self._labeled:
+            return (indptr, degrees, flat, _labs_of(self._arrays))
+        return (indptr, degrees, flat)
 
     def _fn(self, capacity: int):
         if capacity not in self._fns:
@@ -543,12 +653,11 @@ class Matcher:
         """Compile against a sentinel frontier.  Pass the same `chunk`
         later given to :meth:`count`, or the trace compiled here (v0
         shape = chunk width) is not the one counting will use."""
-        indptr, degrees, flat = self._arrays
         width = min(chunk or self.cfg.capacity, self.cfg.capacity)
         v0 = jnp.full((width,), self.graph.n, dtype=jnp.int32)
         with enable_x64(True):
             jax.block_until_ready(
-                self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
+                self._fn(self.cfg.capacity)(*self._call_args(), v0))
 
     # --------------------------------------------------- AOT persistence
     def export_bytes(self, *, chunk: int | None = None) -> bytes:
@@ -562,12 +671,11 @@ class Matcher:
 
         if jax_export is None:
             raise RuntimeError("jax.export unavailable on this JAX version")
-        indptr, degrees, flat = self._arrays
         width = min(chunk or self.cfg.capacity, self.cfg.capacity)
         v0 = jnp.full((width,), self.graph.n, dtype=jnp.int32)
         with enable_x64(True):
             exported = jax_export.export(self._fn(self.cfg.capacity))(
-                indptr, degrees, flat, v0)
+                *self._call_args(), v0)
         return exported.serialize()
 
     def install_exported(self, data: bytes, *,
@@ -586,10 +694,12 @@ class Matcher:
             raise ValueError(
                 f"AOT program exported for {exported.platforms}, running "
                 f"on {backend!r}")
-        indptr, degrees, flat = self._arrays
         width = min(chunk or self.cfg.capacity, self.cfg.capacity)
-        want = (tuple(indptr.shape), tuple(degrees.shape),
-                tuple(flat.shape), (width,))
+        v0 = jax.ShapeDtypeStruct((width,), jnp.int32)
+        want = tuple(
+            tuple(a.shape)
+            for a in jax.tree_util.tree_leaves((*self._call_args(), v0))
+        )
         got = tuple(tuple(a.shape) for a in exported.in_avals)
         if got != want:
             raise ValueError(f"AOT input shapes {got} != expected {want}")
@@ -612,7 +722,7 @@ class Matcher:
         if self._arrays is None:
             raise RuntimeError("matcher was released (evicted from cache)")
         graph, cfg = self.graph, self.cfg
-        indptr, degrees, flat = self._arrays
+        call_args = self._call_args()
         tr = get_tracer()
         # per-level device fencing is strictly opt-in (tracer.sync =
         # --trace-sync): the eager twin serializes the dispatch pipeline
@@ -646,7 +756,7 @@ class Matcher:
                     # dispatch
                     fn = (self._traced_fn(cap) if trace_sync
                           else self._fn(cap))
-                    cnt, needed = fn(indptr, degrees, flat, v0)
+                    cnt, needed = fn(*call_args, v0)
                     # int() blocks until the device result is ready, so
                     # the dispatch span always covers real compute time
                     needed = int(needed)
@@ -705,6 +815,11 @@ class ShardedMatcher:
         self._W = max(graph.max_degree, 1)
         self._iters = _bs_iters(self._W)
         self._arrays = arrays if arrays is not None else device_graph(graph)
+        self._labeled = plan.vlabels is not None
+        if self._labeled and _labs_of(self._arrays) is None:
+            raise ValueError(
+                f"labeled pattern {plan.pattern.name!r} cannot run against "
+                f"unlabeled graph {graph.name!r}")
         self.chunk = chunk or max(64, self.cfg.capacity // 16)
         nshards = 1
         for ax in (axis,) if isinstance(axis, str) else axis:
@@ -719,6 +834,10 @@ class ShardedMatcher:
         self._fns: dict[int, object] = {}     # capacity -> jitted shard fn
         self._capacity = self.cfg.capacity    # sticky escalated capacity
 
+    def _call_args(self):
+        indptr, degrees, flat = self._arrays[:3]
+        return (indptr, degrees, flat, _labs_of(self._arrays))
+
     def _fn(self, capacity: int):
         if capacity not in self._fns:
             from jax.sharding import PartitionSpec as P
@@ -728,13 +847,18 @@ class ShardedMatcher:
                 replace(self.cfg, capacity=capacity),
             )
             per, chunk, axis = self._per, self.chunk, self.axis
+            labeled = self._labeled
 
-            def shard_fn(indptr, degrees, flat, v0_local):
+            def shard_fn(indptr, degrees, flat, labs, v0_local):
                 chunks = v0_local.reshape(per // chunk, chunk)
 
                 def body(carry, v0c):
                     tot, mx = carry
-                    cnt, needed = count_fn(indptr, degrees, flat, v0c)
+                    if labeled:
+                        cnt, needed = count_fn(indptr, degrees, flat,
+                                               labs, v0c)
+                    else:
+                        cnt, needed = count_fn(indptr, degrees, flat, v0c)
                     return (tot + cnt, jnp.maximum(mx, needed)), ()
 
                 init = (jnp.zeros((), jnp.int64), jnp.zeros((), jnp.int32))
@@ -744,8 +868,10 @@ class ShardedMatcher:
             self._fns[capacity] = jax.jit(
                 shard_map(
                     shard_fn,
+                    # P() is a pytree PREFIX for the labs tuple: the label
+                    # views are replicated like the CSR arrays
                     mesh=self.mesh,
-                    in_specs=(P(), P(), P(), P(axis)),
+                    in_specs=(P(), P(), P(), P(), P(axis)),
                     out_specs=(P(), P()),
                     check_vma=False,
                 )
@@ -753,13 +879,12 @@ class ShardedMatcher:
         return self._fns[capacity]
 
     def warmup(self) -> None:
-        indptr, degrees, flat = self._arrays
         # all-sentinel frontier: compiles the program without doing the
         # real count (mirrors Matcher.warmup)
         v0 = jnp.full_like(self._v0, self.graph.n)
         with enable_x64(True):
             jax.block_until_ready(
-                self._fn(self.cfg.capacity)(indptr, degrees, flat, v0))
+                self._fn(self.cfg.capacity)(*self._call_args(), v0))
 
     def release(self) -> None:
         """Mirror of :meth:`Matcher.release` — also drops the striped-v0
@@ -771,7 +896,7 @@ class ShardedMatcher:
     def count(self) -> CountResult:
         if self._arrays is None:
             raise RuntimeError("matcher was released (evicted from cache)")
-        indptr, degrees, flat = self._arrays
+        call_args = self._call_args()
         tr = get_tracer()
         # start from the last successful capacity so warm repeats skip
         # the doomed undersized passes, not just their compilation
@@ -782,8 +907,7 @@ class ShardedMatcher:
                 with enable_x64(True), tr.span(
                         "executor.dispatch", capacity=capacity,
                         frontier=int(self._v0.shape[0])) as dsp:
-                    cnt, needed = self._fn(capacity)(indptr, degrees, flat,
-                                                     self._v0)
+                    cnt, needed = self._fn(capacity)(*call_args, self._v0)
                     needed = int(needed)
                     dsp.set(needed=needed)
                 if needed <= capacity or capacity >= Matcher.MAX_CAPACITY:

@@ -25,18 +25,34 @@ def _adj_sets(n: int, edges: np.ndarray) -> list[set[int]]:
 
 
 def count_injective_maps(
-    n_vertices: int, edges: np.ndarray, pattern: Pattern
+    n_vertices: int,
+    edges: np.ndarray,
+    pattern: Pattern,
+    labels: Sequence[int] | np.ndarray | None = None,
 ) -> int:
-    """#injective maps pattern→graph preserving pattern edges.
+    """#injective maps pattern→graph preserving pattern edges — and, for
+    labeled patterns, mapping each labeled pattern vertex onto a data
+    vertex of the same label (`labels` is the data graph's per-vertex
+    label array; wildcard pattern positions match anything).
 
-    Equals (#embeddings) × |Aut(pattern)|.
+    Equals (#embeddings) × |Aut(pattern)| — label-preserving
+    automorphisms when the pattern is labeled.
     """
+    if pattern.labels is not None and labels is None:
+        raise ValueError(
+            f"labeled pattern {pattern.name!r} needs data-graph labels")
     adj = _adj_sets(n_vertices, edges)
     padj = pattern.adjacency()
+    plabels = pattern.labels
     n = pattern.n
     assigned = [-1] * n
     used: set[int] = set()
     count = 0
+
+    def label_ok(i: int, c: int) -> bool:
+        if plabels is None or plabels[i] is None:
+            return True
+        return int(labels[c]) == plabels[i]
 
     def rec(i: int) -> None:
         nonlocal count
@@ -52,7 +68,7 @@ def count_injective_maps(
         else:
             cand = set(range(n_vertices))
         for c in sorted(cand):
-            if c in used:
+            if c in used or not label_ok(i, c):
                 continue
             assigned[i] = c
             used.add(c)
@@ -65,12 +81,19 @@ def count_injective_maps(
 
 
 def count_with_plan(
-    n_vertices: int, edges: np.ndarray, plan: MatchingPlan
+    n_vertices: int,
+    edges: np.ndarray,
+    plan: MatchingPlan,
+    labels: Sequence[int] | np.ndarray | None = None,
 ) -> int:
     """Reference execution of a MatchingPlan (restrictions honored,
     enumeration only — IEP tail, if any, is enumerated explicitly and must
-    produce plan.iep_divisor × the IEP count)."""
+    produce plan.iep_divisor × the IEP count).  Labeled plans also honor
+    plan.vlabels against the data graph's `labels` array."""
+    if plan.vlabels is not None and labels is None:
+        raise ValueError("labeled plan needs data-graph labels")
     adj = _adj_sets(n_vertices, edges)
+    vlabels = plan.vlabels
     n = plan.n
     assigned = [-1] * n
     used: set[int] = set()
@@ -94,6 +117,9 @@ def count_with_plan(
         for c in sorted(cand):
             if c in used:
                 continue
+            if (vlabels is not None and vlabels[i] is not None
+                    and int(labels[c]) != vlabels[i]):
+                continue
             ok = True
             for (other, d) in restr[i]:
                 if d > 0 and not (c > assigned[other]):
@@ -115,10 +141,17 @@ def count_with_plan(
 
 
 def count_embeddings_oracle(
-    n_vertices: int, edges: np.ndarray, pattern: Pattern
+    n_vertices: int,
+    edges: np.ndarray,
+    pattern: Pattern,
+    labels: Sequence[int] | np.ndarray | None = None,
 ) -> int:
-    """#distinct embeddings (subgraphs) = injective maps / |Aut|."""
-    maps = count_injective_maps(n_vertices, edges, pattern)
+    """#distinct embeddings (subgraphs) = injective maps / |Aut|.
+
+    For labeled patterns |Aut| is the label-preserving subgroup and the
+    injective maps are label-constrained, so the quotient is the number
+    of distinct LABELED subgraph instances."""
+    maps = count_injective_maps(n_vertices, edges, pattern, labels=labels)
     aut = pattern.aut_count()
     assert maps % aut == 0, (maps, aut)
     return maps // aut

@@ -1,8 +1,12 @@
 """Pattern representation and automorphism (permutation) group.
 
-A pattern is a small undirected, unlabeled graph (n <= 8 in practice).
-All plan-time machinery here is pure Python/numpy — the paper does the
-same (Table III: preprocessing is milliseconds).
+A pattern is a small undirected graph (n <= 8 in practice), optionally
+vertex-labeled: ``labels[v]`` is the label id vertex v must match in the
+data graph, or None for a wildcard position.  Labels shrink the
+automorphism group to the label-preserving subgroup, so labeled patterns
+need fewer (or equal) symmetry-breaking restrictions than their
+unlabeled skeletons.  All plan-time machinery here is pure Python/numpy
+— the paper does the same (Table III: preprocessing is milliseconds).
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ class Pattern:
     n: int
     edges: tuple[Edge, ...]
     name: str = ""
+    labels: tuple[int | None, ...] | None = None
 
     def __post_init__(self) -> None:
         seen = set()
@@ -40,6 +45,26 @@ class Pattern:
         object.__setattr__(
             self, "edges", tuple(sorted((min(u, v), max(u, v)) for u, v in self.edges))
         )
+        if self.labels is not None:
+            if len(self.labels) != self.n:
+                raise ValueError(
+                    f"labels has {len(self.labels)} entries for n={self.n}"
+                )
+            norm = []
+            for lab in self.labels:
+                if lab is None:
+                    norm.append(None)
+                    continue
+                lab = int(lab)
+                if lab < 0:
+                    raise ValueError(f"label {lab} must be >= 0")
+                norm.append(lab)
+            # All-wildcard is the unlabeled pattern: normalize so the two
+            # spellings share one canonical key / cache entry / store digest.
+            if all(lab is None for lab in norm):
+                object.__setattr__(self, "labels", None)
+            else:
+                object.__setattr__(self, "labels", tuple(norm))
 
     # ---------------------------------------------------------------- helpers
     @property
@@ -74,9 +99,24 @@ class Pattern:
                     stack.append(w)
         return len(seen) == self.n
 
+    def is_labeled(self) -> bool:
+        return self.labels is not None
+
+    def skeleton(self) -> "Pattern":
+        """The unlabeled pattern with the same edges (identity if unlabeled)."""
+        if self.labels is None:
+            return self
+        return Pattern(self.n, self.edges, name=self.name)
+
+    def with_labels(self, labels: Sequence[int | None] | None) -> "Pattern":
+        return Pattern(self.n, self.edges, name=self.name,
+                       labels=None if labels is None else tuple(labels))
+
     # ----------------------------------------------------------- group theory
     def automorphisms(self) -> list[Perm]:
-        """All permutations p with (u,v) in E  <=>  (p[u],p[v]) in E.
+        """All permutations p with (u,v) in E  <=>  (p[u],p[v]) in E,
+        restricted to the label-preserving subgroup when labeled
+        (labels[p[v]] == labels[v] for every v, wildcards included).
 
         Brute force over n! — fine for pattern sizes (n<=8 → 40320).
         Cached per pattern: Algorithm 1's K_n validation calls this at
@@ -103,34 +143,59 @@ class Pattern:
         """Relabel so that order[i] becomes vertex i (i.e. schedule-major)."""
         pos = {v: i for i, v in enumerate(order)}
         edges = tuple((pos[u], pos[v]) for u, v in self.edges)
-        return Pattern(self.n, edges, name=self.name)
+        labels = None
+        if self.labels is not None:
+            out: list[int | None] = [None] * self.n
+            for v, lab in enumerate(self.labels):
+                out[pos[v]] = lab
+            labels = tuple(out)
+        return Pattern(self.n, edges, name=self.name, labels=labels)
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
-        """JSON-serializable record; `from_dict` round-trips exactly."""
-        return {"n": self.n, "edges": [list(e) for e in self.edges],
-                "name": self.name}
+        """JSON-serializable record; `from_dict` round-trips exactly.
+
+        The "labels" key is emitted only for labeled patterns so unlabeled
+        records are byte-identical to the pre-label (store v1) encoding.
+        """
+        d = {"n": self.n, "edges": [list(e) for e in self.edges],
+             "name": self.name}
+        if self.labels is not None:
+            d["labels"] = list(self.labels)
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "Pattern":
+        labels = d.get("labels")
         return Pattern(int(d["n"]),
                        tuple((int(u), int(v)) for u, v in d["edges"]),
-                       name=str(d.get("name", "")))
+                       name=str(d.get("name", "")),
+                       labels=None if labels is None else tuple(
+                           None if lab is None else int(lab) for lab in labels))
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
-        return f"Pattern({self.name or 'anon'}, n={self.n}, edges={list(self.edges)})"
+        lab = f", labels={list(self.labels)}" if self.labels is not None else ""
+        return (f"Pattern({self.name or 'anon'}, n={self.n}, "
+                f"edges={list(self.edges)}{lab})")
 
 
 @functools.lru_cache(maxsize=1024)
 def _automorphisms_cached(pattern: "Pattern") -> tuple[Perm, ...]:
     adj = pattern.adjacency()
+    labels = pattern.labels
     auts: list[Perm] = []
     for p in itertools.permutations(range(pattern.n)):
         ok = True
-        for u, v in pattern.edges:
-            if not adj[p[u], p[v]]:
-                ok = False
-                break
+        if labels is not None:
+            for v in range(pattern.n):
+                if labels[p[v]] != labels[v]:
+                    ok = False
+                    break
+        if ok:
+            for u, v in pattern.edges:
+                if not adj[p[u], p[v]]:
+                    ok = False
+                    break
         if ok:
             auts.append(tuple(p))
     return tuple(auts)

@@ -67,6 +67,9 @@ class MatchingPlan:
     iep: IEPPlan | None         # folded tail, or None (enumeration to depth n)
     iep_divisor: int            # x in ans = ans_IEP / x  (1 when iep is None)
     res_set: RestrictionSet     # original labeling (for reporting)
+    # vertex label required at loop position i (None = wildcard);
+    # None altogether for unlabeled patterns.
+    vlabels: tuple[int | None, ...] | None = None
 
     @property
     def depth(self) -> int:
@@ -84,6 +87,11 @@ def build_plan(
     n = pattern.n
     if sorted(order) != list(range(n)):
         raise ValueError(f"order {order} is not a permutation of 0..{n-1}")
+    if iep_k > 0 and pattern.labels is not None:
+        # IEP folds the tail into closed-form cardinalities over unlabeled
+        # candidate sets; per-label tail sets are future work, so labeled
+        # plans always enumerate to depth n (best_iep_k returns 0 for them).
+        raise ValueError("IEP folding is not supported for labeled patterns")
     pos = {v: i for i, v in enumerate(order)}
     rel = pattern.relabel(order)          # position-major pattern
     preds = tuple(tuple(p) for p in predecessors(rel, tuple(range(n))))
@@ -139,6 +147,7 @@ def build_plan(
         iep=iep_plan,
         iep_divisor=divisor,
         res_set=tuple(res_set),
+        vlabels=rel.labels,
     )
 
 
@@ -152,7 +161,7 @@ def plan_to_dict(plan: MatchingPlan) -> dict:
     store's load path must stay O(read), and dataclass equality with
     the original plan is what the round-trip tests pin down.
     """
-    return {
+    out = {
         "pattern": plan.pattern.to_dict(),
         "order": list(plan.order),
         "n": int(plan.n),
@@ -167,6 +176,11 @@ def plan_to_dict(plan: MatchingPlan) -> dict:
         "iep_divisor": int(plan.iep_divisor),
         "res_set": [list(r) for r in plan.res_set],
     }
+    if plan.vlabels is not None:
+        # v2 field; omitted for unlabeled plans so v1 records stay
+        # byte-identical and keep loading.
+        out["vlabels"] = list(plan.vlabels)
+    return out
 
 
 def plan_from_dict(d: dict) -> MatchingPlan:
@@ -190,13 +204,19 @@ def plan_from_dict(d: dict) -> MatchingPlan:
         iep=iep,
         iep_divisor=int(d["iep_divisor"]),
         res_set=tuple((int(a), int(b)) for a, b in d["res_set"]),
+        vlabels=None if d.get("vlabels") is None else tuple(
+            None if lab is None else int(lab) for lab in d["vlabels"]),
     )
 
 
 def best_iep_k(
     pattern: Pattern, order: Schedule, res_set: Sequence[Restriction]
 ) -> int:
-    """Largest SOUND k: tail independent AND constant multiplicity."""
+    """Largest SOUND k: tail independent AND constant multiplicity.
+
+    Labeled patterns always get k=0 (see build_plan)."""
+    if pattern.labels is not None:
+        return 0
     pos = {v: i for i, v in enumerate(order)}
     n = pattern.n
     k = max_iep_k(pattern, order)
@@ -212,7 +232,10 @@ def best_iep_k(
 
 def max_iep_k(pattern: Pattern, order: Schedule) -> int:
     """Largest k such that the last k scheduled vertices are pairwise
-    non-adjacent (candidates for IEP folding)."""
+    non-adjacent (candidates for IEP folding).  0 for labeled patterns:
+    IEP folding is unlabeled-only (see build_plan)."""
+    if pattern.labels is not None:
+        return 0
     rel = pattern.relabel(order).adjacency()
     n = pattern.n
     k = 1

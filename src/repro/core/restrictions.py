@@ -5,6 +5,13 @@ reduces the automorphism count of a pattern to exactly one.  A
 restriction is a pair (a, b) meaning ``id(a) > id(b)`` (ids are data-graph
 vertex ids of the embedding).
 
+For labeled patterns `pattern.automorphisms()` is already the
+label-preserving subgroup, so everything below transparently breaks the
+SMALLER group: the completeness target becomes n!/|Aut_label| and the
+generated sets carry fewer (or equal) restrictions than the unlabeled
+skeleton's.  A pattern whose labels kill all symmetry yields the empty
+restriction set.
+
 This is plan-time code (pure Python); the paper reports 8ms..2.5s for
 patterns up to size 7 (Table III) and ours is in the same ballpark.
 """

@@ -11,8 +11,24 @@ from __future__ import annotations
 import hashlib
 from dataclasses import dataclass
 from functools import cached_property
+from typing import NamedTuple
 
 import numpy as np
+
+
+class LabelView(NamedTuple):
+    """Per-label CSR view over a shared label-grouped flat array.
+
+    ``flat[starts[v, c] : starts[v, c] + lens[v, c]]`` is N(v) restricted
+    to vertices of label c, sorted by id — so labeled candidate windows
+    gather straight from contiguous segments and membership tests against
+    full rows keep using the plain sorted CSR.
+    """
+
+    flat: np.ndarray            # [2m (+pad)] int32, rows grouped by label
+    starts: np.ndarray          # [n, L] int32 absolute offsets into flat
+    lens: np.ndarray            # [n, L] int32 segment lengths
+    max_label_degree: np.ndarray  # [L] int32, max over v of lens[v, c]
 
 
 @dataclass(frozen=True)
@@ -23,6 +39,7 @@ class GraphCSR:
     indices: np.ndarray        # [2m (+pad)] int32, sorted per segment
     degrees: np.ndarray        # [n] int32
     name: str = ""
+    labels: np.ndarray | None = None   # [n] int32 vertex labels, or None
 
     # ------------------------------------------------------------ construct
     @staticmethod
@@ -32,9 +49,11 @@ class GraphCSR:
         *,
         relabel_by_degree: bool = False,
         name: str = "",
+        labels: np.ndarray | None = None,
     ) -> "GraphCSR":
         """Build from an undirected edge array [E, 2]; dedups, drops
-        self-loops, symmetrizes, sorts neighborhoods by vertex id."""
+        self-loops, symmetrizes, sorts neighborhoods by vertex id.
+        `labels` ([n] small non-negative ints) makes a property graph."""
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
         edges = edges[edges[:, 0] != edges[:, 1]]
         lo = np.minimum(edges[:, 0], edges[:, 1])
@@ -42,6 +61,13 @@ class GraphCSR:
         key = lo * n + hi
         _, uniq = np.unique(key, return_index=True)
         lo, hi = lo[uniq], hi[uniq]
+
+        if labels is not None:
+            labels = np.asarray(labels, dtype=np.int32)
+            if labels.shape != (n,):
+                raise ValueError(f"labels shape {labels.shape} != ({n},)")
+            if len(labels) and labels.min() < 0:
+                raise ValueError("vertex labels must be non-negative")
 
         if relabel_by_degree:
             deg = np.bincount(
@@ -55,6 +81,8 @@ class GraphCSR:
             inv[perm] = np.arange(n)
             lo, hi = inv[lo], inv[hi]
             lo, hi = np.minimum(lo, hi), np.maximum(lo, hi)
+            if labels is not None:
+                labels = labels[perm]
 
         src = np.concatenate([lo, hi])
         dst = np.concatenate([hi, lo])
@@ -76,6 +104,7 @@ class GraphCSR:
             indices=indices,
             degrees=degrees,
             name=name,
+            labels=labels,
         )
 
     # ------------------------------------------------------------ properties
@@ -95,7 +124,53 @@ class GraphCSR:
         h.update(np.ascontiguousarray(self.indptr).tobytes())
         h.update(np.ascontiguousarray(self.indices[: self.indptr[-1]])
                  .tobytes())
+        if self.labels is not None:
+            # Same structure with different labels must never share a
+            # plan-cache entry; unlabeled graphs keep historical digests.
+            h.update(b"|labels|")
+            h.update(np.ascontiguousarray(self.labels).tobytes())
         return h.hexdigest()
+
+    @cached_property
+    def n_labels(self) -> int:
+        """Number of distinct label slots L (labels are 0..L-1); 0 if
+        unlabeled."""
+        if self.labels is None:
+            return 0
+        return int(self.labels.max()) + 1 if self.n else 0
+
+    @cached_property
+    def label_view(self) -> LabelView:
+        """Per-label CSR view (see LabelView).  Labeled graphs only."""
+        if self.labels is None:
+            raise ValueError(f"graph {self.name!r} has no vertex labels")
+        L = self.n_labels
+        nnz = int(self.indptr[-1])
+        flat = np.full(len(self.indices), self.n, dtype=np.int32)
+        starts = np.zeros((self.n, L), dtype=np.int32)
+        lens = np.zeros((self.n, L), dtype=np.int32)
+        dst = self.indices[:nnz]
+        dst_lab = self.labels[dst]
+        # Stable sort within each row by destination label: rows are already
+        # sorted by id, so each (row, label) segment stays sorted by id.
+        row = np.repeat(np.arange(self.n, dtype=np.int64), self.degrees)
+        order = np.lexsort((dst_lab, row))   # row-major, label-grouped
+        flat[:nnz] = dst[order]
+        # Segment bookkeeping: per (row, label) counts -> offsets.
+        counts = np.zeros((self.n, L), dtype=np.int64)
+        np.add.at(counts, (row, dst_lab.astype(np.int64)), 1)
+        seg_starts = (
+            self.indptr[:-1].astype(np.int64)[:, None]
+            + np.concatenate(
+                [np.zeros((self.n, 1), dtype=np.int64),
+                 np.cumsum(counts, axis=1)[:, :-1]], axis=1)
+        )
+        starts[:] = seg_starts.astype(np.int32)
+        lens[:] = counts.astype(np.int32)
+        max_label_degree = (lens.max(axis=0) if self.n
+                            else np.zeros(L, dtype=np.int32))
+        return LabelView(flat=flat, starts=starts, lens=lens,
+                         max_label_degree=max_label_degree.astype(np.int32))
 
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v] : self.indptr[v + 1]]

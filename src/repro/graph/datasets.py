@@ -61,6 +61,65 @@ def rmat(
     )
 
 
+def random_labels(
+    n: int, n_labels: int, seed: int = 0, skew: float = 1.0
+) -> np.ndarray:
+    """Per-vertex labels 0..n_labels-1 with a geometric-ish skew.
+
+    skew=1.0 is uniform; skew>1 makes low label ids more common (real
+    property graphs are dominated by a few frequent types).  Every label
+    id is guaranteed at least one vertex when n >= n_labels so per-label
+    CSR views and question inventories never see an empty class.
+    """
+    if n_labels < 1:
+        raise ValueError("n_labels must be >= 1")
+    rng = np.random.default_rng(seed)
+    w = skew ** -np.arange(n_labels, dtype=np.float64)
+    labels = rng.choice(n_labels, size=n, p=w / w.sum()).astype(np.int32)
+    if n >= n_labels:
+        # pin one representative per label at random positions
+        pos = rng.choice(n, size=n_labels, replace=False)
+        labels[pos] = np.arange(n_labels, dtype=np.int32)
+    return labels
+
+
+def labeled_rmat(
+    scale: int,
+    edge_factor: int = 8,
+    n_labels: int = 4,
+    seed: int = 0,
+    skew: float = 1.5,
+    name: str = "",
+) -> GraphCSR:
+    """R-MAT skeleton with skewed random vertex labels — the synthetic
+    property graph used by the labeled benchmarks.  Labels are drawn
+    AFTER the degree relabel so label classes cut across the degree
+    distribution (typed hubs and typed leaves both exist)."""
+    g = rmat(scale, edge_factor, seed=seed,
+             name=name or f"LRMAT{scale}x{n_labels}")
+    labels = random_labels(g.n, n_labels, seed=seed + 1, skew=skew)
+    return GraphCSR(n=g.n, m=g.m, indptr=g.indptr, indices=g.indices,
+                    degrees=g.degrees, name=g.name, labels=labels)
+
+
+def labeled_er(
+    n: int,
+    m: int,
+    n_labels: int = 4,
+    seed: int = 0,
+    skew: float = 1.5,
+    name: str = "",
+) -> GraphCSR:
+    """Erdős–Rényi skeleton with skewed random vertex labels."""
+    rng = np.random.default_rng(seed)
+    k = int(m * 1.2) + 16
+    e = rng.integers(0, n, size=(k, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]][:m]
+    labels = random_labels(n, n_labels, seed=seed + 1, skew=skew)
+    return GraphCSR.from_edges(n, e, labels=labels,
+                               name=name or f"LER({n},{m},{n_labels})")
+
+
 def load_edge_list(path: str, name: str = "") -> GraphCSR:
     """SNAP-style whitespace edge list; '#' comments allowed."""
     edges = np.loadtxt(path, dtype=np.int64, comments="#").reshape(-1, 2)
@@ -80,6 +139,12 @@ _NAMED = {
     "patents-syn": lambda: rmat(22, 4, seed=3, name="patents-syn"),
     "tiny-er": lambda: erdos_renyi(256, 2048, seed=4, name="tiny-er"),
     "small-rmat": lambda: rmat(10, 8, seed=5, name="small-rmat"),
+    # Property-graph stand-ins: the questions benchmark pins tiny-labeled
+    # (small enough for the brute-force oracle to answer every question).
+    "tiny-labeled": lambda: labeled_er(
+        256, 1536, n_labels=4, seed=11, name="tiny-labeled"),
+    "small-labeled-rmat": lambda: labeled_rmat(
+        10, 8, n_labels=4, seed=12, name="small-labeled-rmat"),
 }
 
 

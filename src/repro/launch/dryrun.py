@@ -147,7 +147,7 @@ def lower_graphpi(mesh, mesh_name: str, *, buckets: bool | None = None):
     )
     W = max(g.max_degree, 1)
     count_fn = _make_count_fn(plan, W, _bs_iters(W), cfg)
-    indptr, degrees, flat = (np.asarray(x) for x in device_graph(g))
+    indptr, degrees, flat = (np.asarray(x) for x in device_graph(g)[:3])
 
     axes = [a for a in mesh.axis_names if a != "model"]
     nsh = int(np.prod([mesh.shape[a] for a in axes]))

@@ -18,6 +18,15 @@ the result is lru-cached per Pattern anyway.
 The stable hash is sha256 over (n, canonical edges) — stable across
 processes and Python hash randomization, safe to persist or ship
 between serving replicas.
+
+Vertex labels join the scheme as INITIAL 1-WL cells: labeled vertices
+seed refinement with (label, degree) instead of degree alone, so cells
+never mix labels and the canonical search only ranges over
+label-preserving relabelings.  The key payload appends the canonical
+label tuple, so a labeled pattern and its unlabeled skeleton — or two
+different label assignments of one skeleton — can never collide on a
+cache entry or store digest.  Unlabeled patterns take the exact
+pre-label code path and keep their historical digests.
 """
 from __future__ import annotations
 
@@ -40,7 +49,19 @@ def _wl_cells(pattern: Pattern) -> list[tuple[int, ...]]:
     n = pattern.n
     adj = pattern.adjacency()
     nbrs = [tuple(int(u) for u in np.nonzero(adj[v])[0]) for v in range(n)]
-    colors = [len(nbrs[v]) for v in range(n)]
+    if pattern.labels is None:
+        colors = [len(nbrs[v]) for v in range(n)]
+    else:
+        # Labels seed the initial partition: cells never mix labels, and
+        # ordering by actual label VALUE (wildcards first) keeps the cell
+        # order invariant across label-isomorphic presentations.
+        sigs0 = [
+            ((-1 if pattern.labels[v] is None else pattern.labels[v]),
+             len(nbrs[v]))
+            for v in range(n)
+        ]
+        ranks0 = {s: i for i, s in enumerate(sorted(set(sigs0)))}
+        colors = [ranks0[sigs0[v]] for v in range(n)]
     for _ in range(n):
         sigs = [
             (colors[v], tuple(sorted(colors[u] for u in nbrs[v])))
@@ -102,9 +123,19 @@ def canonical_form(pattern: Pattern) -> Pattern:
 
 
 def canonical_key(pattern: Pattern) -> str:
-    """Stable hex digest identifying the pattern's isomorphism class."""
+    """Stable hex digest identifying the pattern's (label-)isomorphism class.
+
+    Labeled patterns append their canonical label tuple to the hashed
+    payload ("*" marks a wildcard position); unlabeled patterns hash the
+    historical (n, edges) payload unchanged, so every pre-label digest —
+    and thus every v1 store record — stays valid.
+    """
     form = canonical_form(pattern)
     payload = f"{form.n}|" + ";".join(f"{u},{v}" for u, v in form.edges)
+    if form.labels is not None:
+        payload += "|L:" + ",".join(
+            "*" if lab is None else str(lab) for lab in form.labels
+        )
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
@@ -117,5 +148,12 @@ def relabeled_variant(pattern: Pattern, seed: int = 0) -> Pattern:
     rng = np.random.default_rng(seed)
     perm = rng.permutation(pattern.n)
     edges = tuple((int(perm[u]), int(perm[v])) for u, v in pattern.edges)
+    labels = None
+    if pattern.labels is not None:
+        out: list[int | None] = [None] * pattern.n
+        for v, lab in enumerate(pattern.labels):
+            out[int(perm[v])] = lab
+        labels = tuple(out)
     return Pattern(pattern.n, edges,
-                   name=f"{pattern.name or 'anon'}-iso{seed}")
+                   name=f"{pattern.name or 'anon'}-iso{seed}",
+                   labels=labels)

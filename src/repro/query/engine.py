@@ -317,14 +317,16 @@ class QueryEngine:
             )
 
     def _oracle_count(self, canon_key: str, pattern: Pattern) -> int:
-        # oracle counts are isomorphism-invariant — memoize per class
+        # oracle counts are (label-)isomorphism-invariant — memoize per
+        # class; the canonical key already separates label variants
         if canon_key not in self._oracle:
             from ..core.oracle import count_embeddings_oracle
 
             if self._edges is None:
                 self._edges = self.graph.edge_array()
             self._oracle[canon_key] = count_embeddings_oracle(
-                self.graph.n, self._edges, pattern)
+                self.graph.n, self._edges, pattern,
+                labels=self.graph.labels)
         return self._oracle[canon_key]
 
     # ------------------------------------------- deprecated sync serving

@@ -15,8 +15,17 @@ additive: this module maps each key to an on-disk record holding
 Layout under the cache dir (one schema version = one directory, so a
 format change never aliases old records):
 
-    <root>/v1/<key-digest>.json      header + config + plan records
-    <root>/v1/<key-digest>.exec      serialized AOT executable (optional)
+    <root>/v2/<key-digest>.json      header + config + plan records
+    <root>/v2/<key-digest>.exec      serialized AOT executable (optional)
+
+Schema v2 (this version) carries vertex labels: the pattern record may
+hold a "labels" list and the plan record a "vlabels" list (both omitted
+for unlabeled patterns, whose encoding is byte-identical to v1).  The
+v1 directory is still READ for unlabeled patterns — a v2 store opened
+over a v1 tree warm-loads every compatible unlabeled record — but a v1
+record claiming label fields is rejected (`v1-labeled`): v1 writers
+could not have produced it, so it can only be tampering or corruption.
+All writes target the v2 directory.
 
 `<key-digest>` is sha256 over the canonical JSON of the full PlanCache
 entry key — (canonical pattern key, graph fingerprint, executor
@@ -58,18 +67,22 @@ from ..core.pattern import Pattern
 from ..core.plan import MatchingPlan, plan_from_dict, plan_to_dict
 from ..obs import get_tracer
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# Older schema directories the loader still reads (unlabeled records
+# only); writes always target the current version.
+LEGACY_SCHEMA_VERSIONS = (1,)
 
 # Modules whose source shapes plan records or compiled programs — the
-# full plan-time pipeline (schedule/restriction generation, perf-model
-# ranking, configuration search) plus the executor/kernel code the AOT
-# trace bakes in: a drift in any of them invalidates every persisted
-# entry (cheap and sound — false invalidation just costs one cold start
-# per entry).
+# full plan-time pipeline (pattern/labels, schedule/restriction
+# generation, perf-model ranking, configuration search) plus the
+# executor/kernel code the AOT trace bakes in: a drift in any of them
+# invalidates every persisted entry (cheap and sound — false
+# invalidation just costs one cold start per entry).
 _FINGERPRINTED_MODULES = (
     "repro.core.config_search",
     "repro.core.executor",
     "repro.core.iep",
+    "repro.core.pattern",
     "repro.core.perf_model",
     "repro.core.plan",
     "repro.core.restrictions",
@@ -153,13 +166,28 @@ class PlanStore:
         os.makedirs(self.vdir, exist_ok=True)
         self.stats = StoreStats()
 
+    def _version_dirs(self) -> list[tuple[int, str]]:
+        """(schema_version, dir) pairs the loader consults, current first.
+        Legacy dirs are only listed when they exist on disk."""
+        out = [(SCHEMA_VERSION, self.vdir)]
+        for v in LEGACY_SCHEMA_VERSIONS:
+            d = os.path.join(self.root, f"v{v}")
+            if os.path.isdir(d):
+                out.append((v, d))
+        return out
+
     def __len__(self) -> int:
-        return sum(1 for f in os.listdir(self.vdir)
-                   if f.endswith(".json") and not f.startswith("stats-"))
+        return sum(
+            1
+            for _, d in self._version_dirs()
+            for f in os.listdir(d)
+            if f.endswith(".json") and not f.startswith("stats-")
+        )
 
     # ------------------------------------------------------------ paths
-    def _paths(self, digest: str) -> tuple[str, str]:
-        base = os.path.join(self.vdir, digest)
+    def _paths(self, digest: str, vdir: str | None = None
+               ) -> tuple[str, str]:
+        base = os.path.join(vdir or self.vdir, digest)
         return base + ".json", base + ".exec"
 
     def header(self) -> dict:
@@ -171,9 +199,10 @@ class PlanStore:
             "backend": jax.default_backend(),
         }
 
-    def _check_header(self, rec: dict) -> str | None:
+    def _check_header(self, rec: dict,
+                      expect_version: int = SCHEMA_VERSION) -> str | None:
         """None when the record is usable, else the rejection reason."""
-        if rec.get("schema_version") != SCHEMA_VERSION:
+        if rec.get("schema_version") != expect_version:
             return "schema_version"
         if rec.get("jax") != jax.__version__ or \
                 rec.get("jaxlib") != jaxlib.__version__:
@@ -182,17 +211,63 @@ class PlanStore:
             return "repro_fingerprint"
         return None
 
+    @staticmethod
+    def _record_labeled(rec: dict) -> bool:
+        """Does the raw record claim any v2 label field?"""
+        return (
+            rec.get("pattern", {}).get("labels") is not None
+            or rec.get("plan", {}).get("vlabels") is not None
+            or rec.get("plan", {}).get("pattern", {}).get("labels")
+            is not None
+        )
+
+    @staticmethod
+    def _key_mismatch(rec: dict, *patterns: Pattern) -> bool:
+        """True when any given pattern's canonical key disagrees with the
+        record's own stored key — i.e. the record sits in a slot that a
+        different (label-)isomorphism class owns.  `canonical_key` folds
+        labels into the digest, so swapping two labels in a persisted
+        pattern/plan moves its key even when the automorphism structure
+        and every internal invariant are untouched."""
+        from .canon import canonical_key
+
+        key = rec.get("key")
+        if not isinstance(key, list) or not key or \
+                not isinstance(key[0], str):
+            return True
+        try:
+            return any(canonical_key(p) != key[0] for p in patterns)
+        except ValueError:          # uncanonicalizable pattern
+            return True
+
     # ------------------------------------------------------------- save
     def save(self, key: tuple, *, pattern: Pattern, config: Configuration,
              plan: MatchingPlan, exec_bytes: bytes | None = None,
              search_seconds: float = 0.0,
-             compile_seconds: float = 0.0) -> str | None:
+             compile_seconds: float = 0.0,
+             schema_version: int = SCHEMA_VERSION) -> str | None:
         """Write-behind one entry; returns the digest, or None when the
-        write failed (serving never crashes on a read-only/full disk)."""
+        write failed (serving never crashes on a read-only/full disk).
+
+        `schema_version` is a migration/test seam: passing a legacy
+        version writes the record into that version's directory with the
+        matching header.  Labeled patterns refuse to downgrade — v1 has
+        no label fields, so a "v1 labeled record" would be exactly the
+        corruption the loader's `v1-labeled` check exists to catch."""
+        if schema_version != SCHEMA_VERSION:
+            if schema_version not in LEGACY_SCHEMA_VERSIONS:
+                raise ValueError(f"unknown schema version {schema_version}")
+            if pattern.labels is not None or plan.vlabels is not None:
+                raise ValueError(
+                    "labeled patterns cannot be written as schema "
+                    f"v{schema_version} (labels are a v2 field)")
+        vdir = os.path.join(self.root, f"v{schema_version}")
+        os.makedirs(vdir, exist_ok=True)
         digest = key_digest(key)
-        json_path, exec_path = self._paths(digest)
+        json_path, exec_path = self._paths(digest, vdir)
         record = {
             **self.header(),
+            "schema_version": schema_version,
             "key": _jsonify(key),
             "mode": key[3],
             "use_iep": bool(key[4]),
@@ -220,7 +295,8 @@ class PlanStore:
         return digest
 
     def _atomic_write(self, path: str, data: bytes) -> None:
-        fd, tmp = tempfile.mkstemp(dir=self.vdir, suffix=".tmp")
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(data)
@@ -234,16 +310,30 @@ class PlanStore:
 
     # ------------------------------------------------------------- load
     def load(self, key: tuple) -> StoreRecord | None:
-        """Load-through for one key; None = absent or rejected (counted)."""
+        """Load-through for one key; None = absent or rejected (counted).
+
+        Consults the current schema directory first, then any legacy
+        directories (unlabeled records only — cache keys are stable
+        across the v1→v2 bump for unlabeled patterns, so a v2 store
+        opened over a v1 tree warm-loads the old records in place)."""
         return self._load_digest(key_digest(key))
 
     def _load_digest(self, digest: str) -> StoreRecord | None:
         with get_tracer().span("store.load", digest=digest[:12]) as sp:
-            rec = self._load_checked(digest, sp)
-        return rec
+            dirs = self._version_dirs()
+            for version, vdir in dirs:
+                json_path, _ = self._paths(digest, vdir)
+                if os.path.exists(json_path):
+                    return self._load_checked(digest, sp, version=version,
+                                              vdir=vdir)
+            self.stats.misses += 1
+            sp.set(outcome="miss")
+            return None
 
-    def _load_checked(self, digest: str, sp) -> StoreRecord | None:
-        json_path, exec_path = self._paths(digest)
+    def _load_checked(self, digest: str, sp, *,
+                      version: int = SCHEMA_VERSION,
+                      vdir: str | None = None) -> StoreRecord | None:
+        json_path, exec_path = self._paths(digest, vdir)
         if not os.path.exists(json_path):
             self.stats.misses += 1
             sp.set(outcome="miss")
@@ -255,10 +345,16 @@ class PlanStore:
             self.stats.reject("corrupt")
             sp.set(outcome="corrupt")
             return None
-        reason = self._check_header(rec)
+        reason = self._check_header(rec, expect_version=version)
         if reason is not None:
             self.stats.reject(reason)
             sp.set(outcome=f"stale:{reason}")
+            return None
+        if version != SCHEMA_VERSION and self._record_labeled(rec):
+            # labels are a v2 field; a v1 record claiming them was not
+            # written by any v1 writer — tampering or corruption
+            self.stats.reject("v1-labeled")
+            sp.set(outcome="v1-labeled")
             return None
         try:
             pattern = Pattern.from_dict(rec["pattern"])
@@ -267,6 +363,17 @@ class PlanStore:
         except (KeyError, TypeError, ValueError):
             self.stats.reject("corrupt")
             sp.set(outcome="corrupt")
+            return None
+        # The digest is derived from the CANONICAL pattern key, and the
+        # record stores the canonically-relabeled pattern — so a record
+        # whose pattern (edges OR labels) disagrees with its own key
+        # serves some other query's slot.  Both the top-level pattern and
+        # the plan's embedded copy are checked: flipped-label tampering
+        # always lands here even when the flipped plan is internally
+        # sound (verify_plan only proves internal consistency).
+        if self._key_mismatch(rec, pattern, plan.pattern):
+            self.stats.reject("key-pattern-mismatch")
+            sp.set(outcome="key-pattern-mismatch")
             return None
         # plan_from_dict round-trips blindly by design (O(read) loads);
         # re-prove soundness here so a drifted/tampered record degrades
@@ -309,13 +416,22 @@ class PlanStore:
 
     def records(self) -> Iterator[StoreRecord]:
         """Every loadable record (rejections counted, not raised) — the
-        warm-from-disk path iterates these and keeps the compatible ones."""
-        for fname in sorted(os.listdir(self.vdir)):
-            if not fname.endswith(".json") or fname.startswith("stats-"):
-                continue
-            rec = self._load_digest(fname[: -len(".json")])
-            if rec is not None:
-                yield rec
+        warm-from-disk path iterates these and keeps the compatible ones.
+        Spans all version directories; when the same digest exists in
+        several, the newest schema's copy shadows the legacy one (exactly
+        what `load` would serve)."""
+        seen: set[str] = set()
+        for _, vdir in self._version_dirs():
+            for fname in sorted(os.listdir(vdir)):
+                if not fname.endswith(".json") or fname.startswith("stats-"):
+                    continue
+                digest = fname[: -len(".json")]
+                if digest in seen:
+                    continue
+                seen.add(digest)
+                rec = self._load_digest(digest)
+                if rec is not None:
+                    yield rec
 
     # ------------------------------------------------------- graph stats
     # GraphStats (|V|, |E|, exact triangle count) is a property of the
@@ -395,48 +511,70 @@ class PlanStore:
         report = {"checked": 0, "quarantined": 0, "stats_checked": 0,
                   "findings": {}}
         with get_tracer().span("store.fsck", root=self.root) as fsp:
-            for fname in sorted(os.listdir(self.vdir)):
-                if not fname.endswith(".json"):
-                    continue
-                digest = fname[: -len(".json")]
-                findings: list[Finding] = []
-                if fname.startswith("stats-"):
-                    report["stats_checked"] += 1
-                    fp = fname[len("stats-"): -len(".json")]
-                    if self.load_graph_stats(fp) is None:
-                        findings.append(Finding(
-                            ERROR, "stats-record", digest,
-                            "stats record is corrupt or its fingerprint "
-                            "does not match its filename"))
-                else:
-                    report["checked"] += 1
-                    findings = self._fsck_record(digest, verify_plan)
-                if has_errors(findings):
-                    report["findings"][digest] = findings
-                    if self._quarantine(digest):
-                        report["quarantined"] += 1
+            for version, vdir in self._version_dirs():
+                for fname in sorted(os.listdir(vdir)):
+                    if not fname.endswith(".json"):
+                        continue
+                    digest = fname[: -len(".json")]
+                    findings: list[Finding] = []
+                    if fname.startswith("stats-"):
+                        if version != SCHEMA_VERSION:
+                            continue    # legacy stats: stale, not unsound
+                        report["stats_checked"] += 1
+                        fp = fname[len("stats-"): -len(".json")]
+                        if self.load_graph_stats(fp) is None:
+                            findings.append(Finding(
+                                ERROR, "stats-record", digest,
+                                "stats record is corrupt or its fingerprint "
+                                "does not match its filename"))
+                    else:
+                        report["checked"] += 1
+                        findings = self._fsck_record(
+                            digest, verify_plan, version=version, vdir=vdir)
+                    if has_errors(findings):
+                        report["findings"][digest] = findings
+                        if self._quarantine(digest, vdir):
+                            report["quarantined"] += 1
             fsp.set(checked=report["checked"],
                     quarantined=report["quarantined"])
         return report
 
-    def _fsck_record(self, digest: str, verify_plan) -> list:
+    def _fsck_record(self, digest: str, verify_plan, *,
+                     version: int = SCHEMA_VERSION,
+                     vdir: str | None = None) -> list:
         from ..analysis.findings import ERROR, WARNING, Finding
 
-        json_path, _ = self._paths(digest)
+        json_path, _ = self._paths(digest, vdir)
         try:
             with open(json_path) as f:
                 rec = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
             return [Finding(ERROR, "record-corrupt", digest,
                             f"unreadable record: {e}")]
+        if version != SCHEMA_VERSION and self._record_labeled(rec):
+            return [Finding(
+                ERROR, "record-version-labeled", digest,
+                f"schema v{version} record claims v2 label fields; no "
+                f"v{version} writer could have produced it")]
         try:
+            pattern = Pattern.from_dict(rec["pattern"])
             plan = plan_from_dict(rec["plan"])
         except (KeyError, TypeError, ValueError) as e:
             return [Finding(ERROR, "record-corrupt", digest,
-                            f"plan does not round-trip: {e}")]
+                            f"pattern/plan does not round-trip: {e}")]
         out = verify_plan(plan, mode=str(rec.get("mode", "graphpi")),
                           location=digest)
-        reason = self._check_header(rec)
+        # the key↔pattern check is what pins labels to the slot: a
+        # label flip can leave the plan internally sound (verify_plan
+        # green) while the record now answers a DIFFERENT typed query
+        # than the digest it is filed under
+        if self._key_mismatch(rec, pattern, plan.pattern):
+            out.append(Finding(
+                ERROR, "key-pattern-mismatch", digest,
+                "stored pattern/plan does not canonicalize to the "
+                "record's own key: the record would serve another "
+                "isomorphism class's (or label assignment's) slot"))
+        reason = self._check_header(rec, expect_version=version)
         if reason is not None:
             # stale ≠ unsound: the loader already rejects these, so fsck
             # only reports them (re-warming overwrites in place)
@@ -446,9 +584,10 @@ class PlanStore:
                 f"loader until re-warmed"))
         return out
 
-    def _quarantine(self, digest: str) -> bool:
-        qdir = os.path.join(self.vdir, "quarantine")
-        json_path, exec_path = self._paths(digest)
+    def _quarantine(self, digest: str, vdir: str | None = None) -> bool:
+        vdir = vdir or self.vdir
+        qdir = os.path.join(vdir, "quarantine")
+        json_path, exec_path = self._paths(digest, vdir)
         try:
             os.makedirs(qdir, exist_ok=True)
             os.replace(json_path,

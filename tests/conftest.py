@@ -1,0 +1,32 @@
+"""Shared test configuration.
+
+Repo root goes on sys.path so tests can import the `benchmarks`
+package — the labeled question inventory (benchmarks/questions.py) is
+both a benchmark and the tier-1 ground-truth gate, so it must stay one
+definition.
+
+Hypothesis (optional dev dependency, requirements-dev.txt) gets a
+derandomized profile so a property-test failure on CI reproduces
+bit-for-bit on any machine instead of depending on a per-run entropy
+seed.  Registered here rather than via a pytest.ini
+`--hypothesis-profile` flag because the flag only exists when the
+hypothesis plugin is installed — an unconditional addopts line would
+break collection in environments without it (pytest.ini documents
+this).  Set REPRO_REQUIRE_HYPOTHESIS=1 (as CI does) to turn the
+missing-dependency skip in tests/test_property.py into a hard failure.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("repro-ci", derandomize=True, deadline=None)
+    settings.load_profile("repro-ci")
+except ImportError:                  # optional dependency absent: tests
+    pass                             # importorskip (or hard-fail under
+                                     # REPRO_REQUIRE_HYPOTHESIS=1)

@@ -32,6 +32,7 @@ from repro.core.restrictions import generate_restriction_sets
 from repro.core.schedule import generate_schedules
 from repro.graph.datasets import erdos_renyi
 from repro.query import PlanStore, QueryEngine, QueryRequest
+from repro.query.store import SCHEMA_VERSION
 
 CFG = ExecutorConfig(capacity=1 << 12)
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -265,7 +266,7 @@ def test_lint_tracer_concretize():
                     "kernels/intersect.py")
     assert has_errors(f)
     # the same calls outside any traced body are not flagged
-    assert not lint_source("def f(x):\n    return int(x)\n", "core/plan.py")
+    assert not lint_source("def f(x):\n    return int(x)\n", "core/misc.py")
 
 
 # ------------------------------------------------------- kernel contracts
@@ -383,7 +384,8 @@ def test_fsck_quarantines_and_untouched_replay(warm_store, tiny_graph,
 def test_graph_stats_persist_and_reload(tmp_path, tiny_graph):
     root = str(tmp_path / "stats-store")
     e1 = QueryEngine(tiny_graph, cfg=CFG, store=PlanStore(root))
-    spath = os.path.join(root, "v1", f"stats-{tiny_graph.fingerprint}.json")
+    spath = os.path.join(root, f"v{SCHEMA_VERSION}",
+                         f"stats-{tiny_graph.fingerprint}.json")
     assert os.path.exists(spath)
 
     store2 = PlanStore(root)
@@ -429,7 +431,7 @@ def test_cli_fsck_flags_tampered_store(warm_store, capsys):
     from repro.analysis.__main__ import main
 
     root, _ = warm_store
-    _flip_record_pair(os.path.join(root, "v1"))
+    _flip_record_pair(os.path.join(root, f"v{SCHEMA_VERSION}"))
     assert main(["--fsck", root]) == 1
     out = capsys.readouterr().out
     assert "quarantined" in out
@@ -440,3 +442,173 @@ def test_finding_severity_validated():
         Finding("fatal", "rule", "loc", "msg")
     fs = [Finding(ERROR, "r", "l", "m")]
     assert has_errors(fs) and error_count(fs) == 1
+
+# --------------------------------------- labeled patterns (ISSUE 8)
+def _random_labeled_pattern(rng) -> Pattern:
+    """Random connected 4-6-vertex pattern with a random label
+    assignment (3 classes + occasional wildcard slots)."""
+    base = _random_pattern(rng)
+    labels = tuple(
+        int(rng.integers(0, 3)) if rng.random() < 0.8 else None
+        for _ in range(base.n)
+    )
+    return base.with_labels(labels)
+
+
+def test_labeled_restrictions_kill_exactly_label_subgroup():
+    """Randomized (fixed-seed) labeled patterns: symmetry breaking must
+    operate on EXACTLY the label-preserving automorphism subgroup — the
+    generated sets keep n!/|Aut_label| orders and eliminate every
+    non-identity label-preserving automorphism, and the built plans
+    re-prove sound end to end.  Label-aware plans must also never emit
+    MORE restrictions than their unlabeled skeletons (a smaller group
+    needs fewer-or-equal breakers)."""
+    import math
+
+    from repro.core.pattern import identity_perm
+    from repro.core.restrictions import (
+        count_orders_satisfying, surviving_perms,
+    )
+
+    rng = np.random.default_rng(42)
+    symmetry_broken = 0
+    for _ in range(25):
+        pat = _random_labeled_pattern(rng)
+        auts = pat.automorphisms()
+        skel = pat.skeleton()
+        assert set(auts) <= set(skel.automorphisms())
+        sets = generate_restriction_sets(pat, max_sets=4)
+        skel_sets = generate_restriction_sets(skel, max_sets=4)
+        assert sets
+        assert min(len(rs) for rs in sets) <= \
+            min(len(rs) for rs in skel_sets), (pat, sets, skel_sets)
+        order = generate_schedules(pat)[0]
+        for rs in sets:
+            assert surviving_perms(auts, rs) == [identity_perm(pat.n)]
+            assert count_orders_satisfying(pat.n, rs) == \
+                math.factorial(pat.n) // len(auts)
+            assert not verify_restriction_set(pat, rs), (pat, rs)
+            plan = build_plan(pat, order, rs)
+            assert plan.vlabels is not None
+            assert not has_errors(verify_plan(plan))
+        if len(auts) < len(skel.automorphisms()):
+            symmetry_broken += 1
+    # the sweep must actually exercise label-broken symmetry, not just
+    # patterns whose labels happen to preserve the full group
+    assert symmetry_broken >= 8
+
+
+def test_labels_killing_all_symmetry_yield_empty_restriction_set():
+    """A path typed L0-L1-L2 has trivial Aut_label: the only sound
+    restriction set is the empty one (every ordering kept)."""
+    pat = Pattern(3, ((0, 1), (1, 2)), labels=(0, 1, 2))
+    assert len(pat.automorphisms()) == 1
+    sets = generate_restriction_sets(pat)
+    assert sets == [()]
+    assert not verify_restriction_set(pat, ())
+    # the SKELETON still has the reversal symmetry and needs a breaker
+    assert all(len(rs) >= 1
+               for rs in generate_restriction_sets(pat.skeleton()))
+
+
+def _save_labeled_record(store, stats, pattern):
+    """Search + persist one labeled pattern the way the cache would;
+    returns (key, digest)."""
+    from repro.core.config_search import search_configuration
+    from repro.query.cache import PlanCache
+    from repro.query.canon import canonical_form
+
+    canon = canonical_form(pattern)
+    best = search_configuration(canon, stats).best
+    plan = build_plan(canon, best.order, best.res_set, iep_k=best.iep_k)
+    key = PlanCache.entry_key(canon, ("gfp", 64, 256, 1), CFG)
+    digest = store.save(key, pattern=canon, config=best, plan=plan)
+    assert digest is not None
+    return key, digest
+
+
+@pytest.mark.parametrize("labels,flip", [
+    ((0, 1, 1), {0: 1, 1: 0}),          # triangle: swap both classes
+    ((2, 0, 2), {0: 2, 2: 0}),          # triangle: structure-preserving
+    ((0, 1, 2), {0: 3}),                # all-distinct: retype one role
+    # NOTE: a flip that merely PERMUTES distinct label values on a fully
+    # symmetric skeleton — e.g. (0,1,2) -> (0,2,1) on a triangle — is
+    # label-ISOMORPHIC to the original (same canonical class, same
+    # count) and is correctly accepted, so it is not a case here.
+])
+def test_flipped_label_tamper_always_flagged_by_fsck(tmp_path, tiny_stats,
+                                                     labels, flip):
+    """Satellite: flipping labels inside a persisted record — even a
+    CONSISTENT flip across pattern, embedded plan pattern, and vlabels,
+    which keeps every internal invariant green — must be rejected by the
+    loader and flagged by fsck: the record's canonical key no longer
+    matches the slot it is filed under."""
+    store = PlanStore(str(tmp_path / "store"))
+    pat = get_pattern("triangle").with_labels(labels)
+    key, digest = _save_labeled_record(store, tiny_stats, pat)
+
+    path = os.path.join(store.vdir, digest + ".json")
+    with open(path) as f:
+        rec = json.load(f)
+    sub = lambda x: flip.get(x, x)                     # noqa: E731
+    rec["pattern"]["labels"] = [sub(x) for x in rec["pattern"]["labels"]]
+    rec["plan"]["pattern"]["labels"] = [
+        sub(x) for x in rec["plan"]["pattern"]["labels"]]
+    rec["plan"]["vlabels"] = [sub(x) for x in rec["plan"]["vlabels"]]
+    with open(path, "w") as f:
+        json.dump(rec, f)
+
+    fresh = PlanStore(store.root)
+    assert fresh.load(key) is None
+    assert fresh.stats.rejects.get("key-pattern-mismatch") == 1
+
+    report = PlanStore(store.root).fsck()
+    assert digest in report["findings"]
+    assert any(f.rule == "key-pattern-mismatch"
+               for f in report["findings"][digest])
+    assert report["quarantined"] == 1
+    assert not os.path.exists(path)
+
+
+def test_inconsistent_label_tamper_flagged(tmp_path, tiny_stats):
+    """Flipping ONLY the plan's vlabels (pattern left alone) is internal
+    drift — verify_plan's vlabels rebuild check catches it even before
+    the key comparison."""
+    store = PlanStore(str(tmp_path / "store"))
+    pat = get_pattern("triangle").with_labels((0, 1, 2))
+    key, digest = _save_labeled_record(store, tiny_stats, pat)
+
+    path = os.path.join(store.vdir, digest + ".json")
+    with open(path) as f:
+        rec = json.load(f)
+    rec["plan"]["vlabels"] = [rec["plan"]["vlabels"][i]
+                              for i in (1, 0, 2)]
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    assert PlanStore(store.root).load(key) is None
+    report = PlanStore(store.root).fsck()
+    assert digest in report["findings"]
+    assert has_errors(report["findings"][digest])
+
+
+def test_lint_label_coverage():
+    """Dropping the labels reference from an identity surface — or the
+    surface itself — is a lint ERROR; the live tree stays clean (covered
+    by test_lint_clean_on_live_tree)."""
+    src = ("def canonical_key(p):\n"
+           "    return str(p.n)\n"
+           "def _wl_cells(p):\n"
+           "    return [p.labels]\n")
+    f = lint_source(src, "src/repro/query/canon.py")
+    assert any(x.rule == "label-coverage" and "canonical_key" in x.message
+               for x in f)
+    assert not any("_wl_cells" in x.message for x in f)
+
+    # surface renamed/removed entirely -> also flagged
+    f2 = lint_source("x = 1\n", "src/repro/core/plan.py")
+    assert any(x.rule == "label-coverage" and "plan_to_dict" in x.message
+               for x in f2)
+
+    # unrelated modules are exempt
+    assert not any(x.rule == "label-coverage"
+                   for x in lint_source("x = 1\n", "src/repro/obs/core.py"))

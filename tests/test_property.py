@@ -2,11 +2,20 @@
 
 `hypothesis` is an optional dev dependency (requirements-dev.txt); the
 whole module skips cleanly when it is not installed so `pytest -x`
-never dies at collection."""
+never dies at collection.  CI sets REPRO_REQUIRE_HYPOTHESIS=1 to turn
+that skip into a hard failure — the suite must actually EXECUTE there,
+not silently vanish when a cache miss drops the dependency.  Profile:
+tests/conftest.py pins a derandomized hypothesis profile so any failure
+here reproduces bit-for-bit."""
+import os
+
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
+if os.environ.get("REPRO_REQUIRE_HYPOTHESIS") == "1":
+    import hypothesis            # ImportError = loud collection failure
+else:
+    hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core.executor import ExecutorConfig, count_embeddings

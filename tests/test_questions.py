@@ -1,0 +1,72 @@
+"""Tier-1 ground-truth gate: the labeled question inventory.
+
+`benchmarks/questions.py` fixes a generated property graph and a
+≥50-question inventory (typed multi-hop joins, labeled triangles and
+cliques, star-with-role queries, wildcard mixes) whose answers the
+brute-force oracle states independently of every plan-time and
+executor-path decision.  This module is the hard gate: the full
+pipeline (canonicalization → configuration search → label-aware plan →
+executor) must agree with the oracle on EVERY question, on BOTH
+executor paths — 100% accuracy, no tolerance, no sampling.
+
+A disagreement on any single question localizes a soundness bug
+(label-aware restriction generation, per-label candidate gather, root
+masking, canonical keys) that throughput benchmarks would average away.
+"""
+import pytest
+
+from benchmarks.questions import (
+    DATASET, inventory, machine_answers, oracle_answers,
+)
+from repro.graph.datasets import named_dataset
+
+MIN_QUESTIONS = 50
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return named_dataset(DATASET)
+
+
+@pytest.fixture(scope="module")
+def questions():
+    return inventory()
+
+
+@pytest.fixture(scope="module")
+def truth(graph, questions):
+    return oracle_answers(graph, questions)
+
+
+def test_inventory_shape(questions):
+    assert len(questions) >= MIN_QUESTIONS
+    assert len({q.qid for q in questions}) == len(questions)
+    assert len({q.category for q in questions}) >= 6
+    for q in questions:
+        assert q.pattern.is_labeled(), f"{q.qid} is not a labeled pattern"
+        assert q.text, f"{q.qid} has no question text"
+
+
+def test_inventory_has_mass(graph, questions, truth):
+    """An inventory dominated by empty answer classes would 'pass' while
+    validating nothing; demand real embedding mass behind the questions
+    and at least one genuinely-empty class (the zero answer is also a
+    ground truth the pipeline must reproduce, not special-case)."""
+    nonzero = sum(1 for v in truth.values() if v > 0)
+    assert nonzero >= len(questions) * 3 // 5
+    assert any(v == 0 for v in truth.values())
+
+
+@pytest.mark.parametrize("path,use_pallas",
+                         [("portable", False), ("fused", True)])
+def test_all_questions_answered_correctly(graph, questions, truth,
+                                          path, use_pallas):
+    answers, _ = machine_answers(graph, questions, use_pallas=use_pallas)
+    wrong = {
+        q.qid: {"question": q.text, "got": answers[q.qid],
+                "want": truth[q.qid]}
+        for q in questions if answers[q.qid] != truth[q.qid]
+    }
+    assert not wrong, (
+        f"{path} path got {len(wrong)}/{len(questions)} questions "
+        f"wrong: {wrong}")

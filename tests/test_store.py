@@ -270,3 +270,156 @@ def test_zero_capacity_cache_keeps_returned_entry_usable(tiny_graph,
                                     tiny_stats, cfg=CFG, warm=False)
     assert not hit and len(cache) == 0
     assert entry.count().count >= 0        # still executable
+
+
+# ----------------------------------- schema v2: labels + v1 migration
+def _searched(pattern, stats):
+    """(canonical pattern, config, plan) the way the cache persists them."""
+    from repro.query.canon import canonical_form
+
+    canon = canonical_form(pattern)
+    config = search_configuration(canon, stats).best
+    plan = build_plan(canon, config.order, config.res_set,
+                      iep_k=config.iep_k)
+    return canon, config, plan
+
+
+@pytest.fixture(scope="module")
+def labeled_graph():
+    from repro.graph.datasets import named_dataset
+
+    return named_dataset("tiny-labeled")
+
+
+@pytest.fixture(scope="module")
+def labeled_stats(labeled_graph):
+    return compute_stats(labeled_graph, CFG)
+
+
+def test_labeled_and_skeleton_never_share_entry_or_record(
+        tmp_path, labeled_graph, labeled_stats):
+    """Key-separation satellite: a labeled pattern, a second label
+    assignment of the same skeleton, and the bare skeleton are three
+    distinct cache entries AND three distinct store records — on the
+    SAME graph, executor config, and layout."""
+    from repro.query.cache import graph_fingerprint
+
+    gfp = graph_fingerprint(labeled_graph, labeled_stats)
+    tri = get_pattern("triangle")
+    variants = [tri, tri.with_labels((0, 1, 1)), tri.with_labels((0, 0, 1))]
+    keys = [PlanCache.entry_key(p, gfp, CFG) for p in variants]
+    assert len({k[0] for k in keys}) == 3          # canonical keys split
+    assert len({key_digest(k) for k in keys}) == 3  # store slots split
+
+    store = PlanStore(str(tmp_path / "store"))
+    cache = PlanCache(store=store)
+    for p in variants:
+        cache.get_or_build(p, labeled_graph, labeled_stats, cfg=CFG,
+                           warm=False)
+    assert len(cache) == 3 and len(store) == 3
+    assert cache.stats.n_searches == 3
+    # re-querying any variant hits its own entry, never a sibling's
+    for p in variants:
+        _, hit = cache.get_or_build(p, labeled_graph, labeled_stats,
+                                    cfg=CFG, warm=False)
+        assert hit
+    assert cache.stats.n_searches == 3
+
+
+def test_labeled_record_round_trips_with_vlabels(tmp_path, labeled_graph,
+                                                 labeled_stats):
+    from repro.query.cache import graph_fingerprint
+
+    store = PlanStore(str(tmp_path))
+    canon, config, plan = _searched(
+        get_pattern("rectangle").with_labels((0, 1, 0, None)),
+        labeled_stats)
+    assert plan.vlabels is not None
+    key = PlanCache.entry_key(
+        canon, graph_fingerprint(labeled_graph, labeled_stats), CFG)
+    store.save(key, pattern=canon, config=config, plan=plan)
+    rec = PlanStore(store.root).load(key)
+    assert rec is not None
+    assert rec.pattern == canon and rec.pattern.labels == canon.labels
+    assert rec.plan == plan and rec.plan.vlabels == plan.vlabels
+
+
+def test_v1_unlabeled_records_still_load(tmp_path, labeled_stats):
+    """A v2 store opened over a v1 tree warm-loads unlabeled records in
+    place (same digests), and a v2 rewrite of the same key shadows the
+    legacy copy."""
+    store = PlanStore(str(tmp_path))
+    canon, config, plan = _searched(get_pattern("triangle"), labeled_stats)
+    key = PlanCache.entry_key(canon, ("gfp", 64, 256, 1), CFG)
+    digest = store.save(key, pattern=canon, config=config, plan=plan,
+                        schema_version=1)
+    assert os.path.exists(os.path.join(store.root, "v1", digest + ".json"))
+    assert len(store) == 1
+
+    fresh = PlanStore(store.root)
+    rec = fresh.load(key)
+    assert rec is not None and rec.header["schema_version"] == 1
+
+    # re-saving at the current version shadows the v1 copy on load
+    store.save(key, pattern=canon, config=config, plan=plan)
+    rec2 = PlanStore(store.root).load(key)
+    assert rec2 is not None
+    assert rec2.header["schema_version"] == SCHEMA_VERSION
+    # records() must not yield the same digest twice across versions
+    digs = [r.digest for r in PlanStore(store.root).records()]
+    assert digs.count(digest) == 1
+
+
+def test_labeled_patterns_refuse_v1_downgrade(tmp_path, labeled_stats):
+    store = PlanStore(str(tmp_path))
+    canon, config, plan = _searched(
+        get_pattern("triangle").with_labels((0, 1, 1)), labeled_stats)
+    key = PlanCache.entry_key(canon, ("gfp", 64, 256, 1), CFG)
+    with pytest.raises(ValueError, match="labels are a v2 field"):
+        store.save(key, pattern=canon, config=config, plan=plan,
+                   schema_version=1)
+
+
+def test_forged_v1_labeled_record_rejected(tmp_path, labeled_stats):
+    """A v1 record claiming label fields could not have been written by
+    any v1 writer: the loader rejects it and fsck flags it."""
+    store = PlanStore(str(tmp_path))
+    canon, config, plan = _searched(get_pattern("triangle"), labeled_stats)
+    key = PlanCache.entry_key(canon, ("gfp", 64, 256, 1), CFG)
+    digest = store.save(key, pattern=canon, config=config, plan=plan,
+                        schema_version=1)
+    path = os.path.join(store.root, "v1", digest + ".json")
+    rec = json.load(open(path))
+    rec["pattern"]["labels"] = [0, 1, 1]
+    with open(path, "w") as f:
+        json.dump(rec, f)
+
+    fresh = PlanStore(store.root)
+    assert fresh.load(key) is None
+    assert fresh.stats.rejects.get("v1-labeled") == 1
+    report = PlanStore(store.root).fsck()
+    assert any(f.rule == "record-version-labeled"
+               for f in report["findings"][digest])
+    assert report["quarantined"] == 1
+    assert os.path.exists(
+        os.path.join(store.root, "v1", "quarantine", digest + ".json"))
+
+
+def test_labeled_engine_round_trip_through_store(tmp_path, labeled_graph,
+                                                 labeled_stats):
+    """End-to-end: a labeled query served, persisted, and replayed by a
+    restarted replica with zero searches — and verified against the
+    oracle through the engine's own verify path."""
+    tri = get_pattern("triangle").with_labels((0, 1, 1))
+    root = str(tmp_path / "plan-store")
+    e1 = QueryEngine(labeled_graph, cfg=CFG, store=PlanStore(root),
+                     stats=labeled_stats)
+    r1 = e1.submit(QueryRequest(tri, verify=True))
+    assert r1.verified and not r1.cache_hit
+
+    e2 = QueryEngine(labeled_graph, cfg=CFG, store=PlanStore(root),
+                     stats=labeled_stats)
+    r2 = e2.submit(QueryRequest(tri))
+    assert r2.count == r1.count
+    assert e2.cache.stats.n_searches == 0
+    assert e2.cache.stats.persist_hits == 1
