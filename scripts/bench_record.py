@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Append one perf-trajectory record per CI run (ISSUE 9 satellite).
+
+Scans a benchmark artifact directory (the `REPRO_BENCH_OUT` the
+bench-smoke job writes) for the Row-list JSONs `benchmarks/_util.emit`
+produces, distills them into a flat {metric: value} dict, and appends
+ONE JSON line to `trajectory.jsonl`:
+
+    {"sha": "<git sha>", "date": "<commit iso date>", "branch": "...",
+     "metrics": {"query_throughput.warm_qps": 123.4, ...}}
+
+CI keeps the file alive across runs by downloading the previous
+`bench-trajectory` artifact before appending and re-uploading after
+(.github/workflows/ci.yml), so the artifact IS the trajectory — every
+line one commit, oldest first.  The delta summary against the previous
+record is printed for humans and NEVER fails the job: shared-runner
+numbers are noisy; the trajectory exists so regressions show up as a
+trend, not so single samples gate merges.
+
+The sha/date come from `git show -s` (the commit under test), not the
+wall clock, so re-recording the same commit is reproducible.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+# metric -> (source file, row predicate, value extractor).  A file that
+# is missing or malformed simply contributes no metrics (partial bench
+# runs still record what they measured).
+WELL_KNOWN = {
+    "query_throughput.cold_qps": ("query_throughput.json", "cold"),
+    "query_throughput.warm_qps": ("query_throughput.json", "warm"),
+    "query_throughput.speedup_x": ("query_throughput.json", "speedup"),
+    "gateway_mix.interference_x": ("gateway_mix.json", "interference"),
+    "gateway_mix.tenant_solo_p99_ms": ("gateway_mix.json", "tenant_solo"),
+    "gateway_mix.tenant_adversarial_p99_ms": (
+        "gateway_mix.json", "tenant_adversarial"),
+    "gateway_mix.coalesced_executions": ("gateway_mix.json", "coalesce"),
+}
+
+
+def _rows(path: str) -> list[dict]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return []
+    return [r for r in data if isinstance(r, dict) and "value" in r]
+
+
+def collect(bench_dir: str) -> dict[str, float]:
+    """Distill every recognized artifact under `bench_dir`."""
+    metrics: dict[str, float] = {}
+    by_file: dict[str, list[tuple[str, str]]] = {}
+    for metric, (fname, phase) in WELL_KNOWN.items():
+        by_file.setdefault(fname, []).append((metric, phase))
+    for fname, wanted in by_file.items():
+        rows = _rows(os.path.join(bench_dir, fname))
+        phases = {r["keys"].get("phase"): r for r in rows
+                  if isinstance(r.get("keys"), dict)}
+        for metric, phase in wanted:
+            if phase in phases:
+                metrics[metric] = float(phases[phase]["value"])
+    # question-benchmark accuracy rides under a stable name
+    for fname in ("BENCH_questions.json", "questions.json"):
+        rows = _rows(os.path.join(bench_dir, fname))
+        if not rows:
+            continue
+        for r in rows:
+            keys = r.get("keys", {})
+            path = keys.get("path")
+            if path and "category" not in keys and "phase" not in keys:
+                metrics[f"questions.{path}_accuracy"] = float(r["value"])
+                metrics["questions.n"] = float(keys.get("questions", 0))
+        break
+    return metrics
+
+
+def git_meta() -> dict[str, str]:
+    def show(fmt: str) -> str:
+        try:
+            return subprocess.run(
+                ["git", "show", "-s", f"--format={fmt}"],
+                capture_output=True, text=True, check=True,
+            ).stdout.strip()
+        except (OSError, subprocess.CalledProcessError):
+            return "unknown"
+    branch = os.environ.get("GITHUB_REF_NAME") or "unknown"
+    return {"sha": os.environ.get("GITHUB_SHA") or show("%H"),
+            "date": show("%cI"), "branch": branch}
+
+
+def last_record(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f if ln.strip()]
+        return json.loads(lines[-1]) if lines else None
+    except (OSError, ValueError):
+        return None
+
+
+def delta_summary(prev: dict | None, record: dict) -> list[str]:
+    """Human lines, one per metric; arrows against the previous record.
+    Informational only — NEVER a gate (see module docstring)."""
+    out = []
+    prev_m = (prev or {}).get("metrics", {})
+    for k in sorted(record["metrics"]):
+        v = record["metrics"][k]
+        if k in prev_m and prev_m[k]:
+            pct = 100.0 * (v - prev_m[k]) / abs(prev_m[k])
+            out.append(f"  {k}: {v:.6g}  ({pct:+.1f}% vs "
+                       f"{str(prev.get('sha'))[:10]})")
+        else:
+            out.append(f"  {k}: {v:.6g}  (first record)")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default=os.environ.get(
+        "REPRO_BENCH_OUT", "artifacts/bench-smoke"))
+    ap.add_argument("--out", default="artifacts/bench/trajectory.jsonl")
+    args = ap.parse_args(argv)
+
+    metrics = collect(args.bench_dir)
+    if not metrics:
+        print(f"bench_record: no recognizable artifacts under "
+              f"{args.bench_dir!r}; nothing recorded", file=sys.stderr)
+        return 1
+    record = {**git_meta(), "metrics": metrics}
+    prev = last_record(args.out)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    with open(args.out) as f:
+        n = sum(1 for ln in f if ln.strip())
+    print(f"bench_record: appended {record['sha'][:10]} "
+          f"({len(metrics)} metrics) -> {args.out} ({n} records)")
+    for line in delta_summary(prev, record):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Gateway smoke (ISSUE 5 acceptance), CPU, seconds-scale:
+# Gateway smoke (ISSUE 5 + ISSUE 9 acceptance), CPU, seconds-scale:
 #   1. replay one request trace through the legacy single-tenant path
 #      (launch/query_serve.py, sequential rounds) and through the
 #      Gateway (launch/gateway.py) co-scheduled with a live LM decode
 #      workload — the per-query counts must be IDENTICAL (the gateway
 #      changes scheduling, never results);
 #   2. the gateway run must coalesce the trace's duplicate triangle
-#      queries (--expect-coalesced) and finish its LM steps.
+#      queries (--expect-coalesced) and finish its LM steps;
+#   3. replay the SAME trace through the RPC socket front door
+#      (launch/gateway.py --listen + repro.serve.rpc client, with a
+#      preemption budget active) — every count bit-identical again.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -41,5 +44,39 @@ if ! cmp -s "$tmp/legacy.counts" "$tmp/gateway.counts"; then
   diff "$tmp/legacy.counts" "$tmp/gateway.counts" >&2 || true
   exit 1
 fi
+
+echo "== RPC path (--listen socket front door, preemptive quanta) =="
+python -m repro.launch.gateway --dataset tiny-er --no-lm \
+  --capacity 8192 --single-device --graph-quantum 4 \
+  --preempt-dispatches 8 --listen 0 --port-file "$tmp/port" \
+  > "$tmp/server.log" 2>&1 &
+server_pid=$!
+for _ in $(seq 1 120); do
+  [ -s "$tmp/port" ] && break
+  if ! kill -0 "$server_pid" 2>/dev/null; then
+    echo "gateway_smoke FAILED: RPC server died during startup:" >&2
+    cat "$tmp/server.log" >&2
+    exit 1
+  fi
+  sleep 1
+done
+[ -s "$tmp/port" ] || { echo "gateway_smoke FAILED: no port file" >&2; exit 1; }
+read -r host port < "$tmp/port"
+python -m repro.serve.rpc --connect "$host:$port" \
+  --requests "$tmp/trace.jsonl" --shutdown | tee "$tmp/rpc.log"
+wait "$server_pid" || {
+  echo "gateway_smoke FAILED: RPC server exited nonzero:" >&2
+  cat "$tmp/server.log" >&2
+  exit 1
+}
+cat "$tmp/server.log"
+
+grep -o 'count=[0-9]*' "$tmp/rpc.log" > "$tmp/rpc.counts"
+if ! cmp -s "$tmp/legacy.counts" "$tmp/rpc.counts"; then
+  echo "gateway_smoke FAILED: per-query counts differ between the" >&2
+  echo "legacy path and the RPC socket path:" >&2
+  diff "$tmp/legacy.counts" "$tmp/rpc.counts" >&2 || true
+  exit 1
+fi
 echo "gateway_smoke OK: $(wc -l < "$tmp/legacy.counts") counts identical
-across legacy and gateway paths"
+across legacy, gateway, and RPC socket paths"

@@ -164,6 +164,24 @@ class CountResult:
     max_needed: int                  # max frontier rows needed at any level
 
 
+@dataclass
+class CountState:
+    """Resumable progress of one chunked count (`Matcher.count_partial`).
+
+    The outer vertex loop is a work stack of ``(start, end, capacity)``
+    spans; a preempted count is exactly this stack plus the raw running
+    totals.  `total` is the RAW embedding sum — the IEP divisor (and the
+    naive-mode |Aut| division, `CacheEntry.count_partial`) apply once at
+    completion, so partial segments never lose remainder bits."""
+
+    spans: list                      # [(start, end, capacity)], LIFO
+    chunk: int                       # resolved chunk width (span rebuilds)
+    total: int = 0                   # raw sum, pre iep_divisor
+    overflowed: bool = False
+    max_needed: int = 0
+    dispatches: int = 0              # kernel dispatches so far (all segments)
+
+
 # --------------------------------------------------------------------------
 # single-shard counting kernel (pure function of device arrays; jit-safe)
 # --------------------------------------------------------------------------
@@ -719,6 +737,20 @@ class Matcher:
         and retried (host-side adaptivity — the SPMD analogue of the
         paper's work splitting).  A single root that still overflows
         escalates to a doubled-capacity kernel so the count stays exact."""
+        _, out = self.count_partial(chunk=chunk)
+        return out
+
+    def count_partial(self, state: CountState | None = None, *,
+                      chunk: int | None = None,
+                      max_dispatches: int | None = None,
+                      ) -> tuple[CountState, CountResult | None]:
+        """Run the chunked outer loop for up to `max_dispatches` kernel
+        dispatches, then yield.  Returns ``(state, result)`` where
+        `result` is None while spans remain — pass `state` back in to
+        resume exactly where the loop stopped (same span stack, same
+        raw totals; the final count is bit-identical to an
+        uninterrupted :meth:`count`).  `max_dispatches=None` runs to
+        completion (the exact :meth:`count` loop)."""
         if self._arrays is None:
             raise RuntimeError("matcher was released (evicted from cache)")
         graph, cfg = self.graph, self.cfg
@@ -727,21 +759,27 @@ class Matcher:
         # per-level device fencing is strictly opt-in (tracer.sync =
         # --trace-sync): the eager twin serializes the dispatch pipeline
         trace_sync = tr.enabled and tr.sync
-        with enable_x64(True), tr.span(
-                "executor.count", depth=self.plan.depth,
-                buckets=cfg.fingerprint(), sync=trace_sync) as csp:
-            total = 0
-            overflowed = False
-            max_needed = 0
-            dispatches = 0
+        if state is None:
             chunk = min(chunk or cfg.capacity, cfg.capacity)
             # spans: (start, end, capacity).  Start at the last count's
             # escalated capacity so warm repeats (the serve path) skip
             # the doomed undersized passes.
             cap0 = self._capacity
-            spans = [(s, min(s + chunk, graph.n), cap0)
-                     for s in range(0, graph.n, chunk)]
-            while spans:
+            state = CountState(
+                spans=[(s, min(s + chunk, graph.n), cap0)
+                       for s in range(0, graph.n, chunk)],
+                chunk=chunk,
+            )
+        chunk = state.chunk
+        budget = None if max_dispatches is None else max(int(max_dispatches),
+                                                         1)
+        with enable_x64(True), tr.span(
+                "executor.count", depth=self.plan.depth,
+                buckets=cfg.fingerprint(), sync=trace_sync,
+                resumed=state.dispatches > 0) as csp:
+            spans = state.spans
+            segment = 0
+            while spans and (budget is None or segment < budget):
                 s, e, cap = spans.pop()
                 self._capacity = max(self._capacity, cap)
                 width = min(chunk, cap)
@@ -761,8 +799,9 @@ class Matcher:
                     # the dispatch span always covers real compute time
                     needed = int(needed)
                     dsp.set(needed=needed)
-                dispatches += 1
-                max_needed = max(max_needed, needed)
+                segment += 1
+                state.dispatches += 1
+                state.max_needed = max(state.max_needed, needed)
                 if needed > cap:
                     if e - s > 1:
                         mid = (s + e) // 2
@@ -770,13 +809,17 @@ class Matcher:
                     elif cap < self.MAX_CAPACITY:
                         spans.append((s, e, cap * 2))   # escalate
                     else:
-                        overflowed = True  # cannot split or grow further
-                        total += int(cnt)
+                        state.overflowed = True  # cannot split/grow further
+                        state.total += int(cnt)
                     continue
-                total += int(cnt)
-            csp.set(dispatches=dispatches, max_needed=max_needed)
-        return CountResult(count=total // self.plan.iep_divisor,
-                           overflowed=overflowed, max_needed=max_needed)
+                state.total += int(cnt)
+            csp.set(dispatches=segment, max_needed=state.max_needed,
+                    preempted=bool(spans))
+        if spans:
+            return state, None
+        return state, CountResult(count=state.total // self.plan.iep_divisor,
+                                  overflowed=state.overflowed,
+                                  max_needed=state.max_needed)
 
 
 def count_embeddings(

@@ -18,6 +18,16 @@ a request file replayed here and through `launch/query_serve.py` must
 produce identical counts per query).  `--model-buckets` sizes the
 executor's degree buckets from the perf model's predicted frontier
 occupancy instead of the legacy 4×-margin heuristic.
+
+`--listen PORT` turns the process into the multi-tenant RPC front door
+(serve/rpc.py): instead of draining a fixed workload and exiting, the
+gateway stays resident and N client processes submit/poll/cancel
+tickets over length-prefixed JSON frames (`python -m repro.serve.rpc
+--connect HOST:PORT --requests trace.jsonl`).  PORT 0 binds an
+ephemeral port; `--port-file` writes "host port" once bound so scripts
+can rendezvous.  `--preempt-dispatches` bounds kernel dispatches per
+round (huge queries checkpoint and resume), `--tenant-depth` bounds
+each tenant's queue (admission control).
 """
 from __future__ import annotations
 
@@ -70,6 +80,18 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
+    # ---- RPC front door / multi-tenancy
+    ap.add_argument("--listen", type=int, default=-1, metavar="PORT",
+                    help="serve tickets over a socket instead of draining "
+                         "a fixed workload (0 = ephemeral port)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port-file", default="",
+                    help="write 'host port' here once the socket is bound")
+    ap.add_argument("--preempt-dispatches", type=int, default=0,
+                    help="kernel-dispatch budget per engine round (0 = "
+                         "run every class to completion)")
+    ap.add_argument("--tenant-depth", type=int, default=0,
+                    help="max queued tickets per tenant (0 = unbounded)")
     # ---- shared
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--single-device", action="store_true",
@@ -122,6 +144,8 @@ def main(argv=None):
         graph, cfg=cfg, mesh=graph_mesh, chunk=args.chunk or None,
         cache=PlanCache(max_entries=args.max_entries or None, store=store),
         stats=stats, metrics=metrics,
+        preempt_dispatches=args.preempt_dispatches or None,
+        tenant_depth=args.tenant_depth or None,
     )
     print(f"[gateway] graph={graph.name} (|V|={graph.n}, |E|={graph.m}) "
           f"resident on {engine.summary()['devices']} device(s)"
@@ -130,7 +154,11 @@ def main(argv=None):
         n = engine.warm_from_disk()
         print(f"[gateway] warm-from-disk: {n} plan(s) preloaded")
 
-    requests = build_requests(args, get_pattern)
+    listen = args.listen >= 0
+    # a listening server starts with an empty queue unless a trace file
+    # pre-seeds it — clients are the request source
+    requests = [] if (listen and not args.requests) \
+        else build_requests(args, get_pattern)
     distinct = len({canonical_key(r.pattern) for r in requests})
     print(f"[gateway] {len(requests)} graph requests "
           f"({distinct} distinct isomorphism classes)")
@@ -143,7 +171,7 @@ def main(argv=None):
             args.arch, smoke=not args.full_lm, batch=args.batch,
             prompt_len=args.prompt_len, gen=args.gen, mesh=mesh,
             seed=args.seed, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every,
+            ckpt_every=args.ckpt_every, metrics=metrics,
         )
         gw.add(LMDecodeWorkload(session, resume=args.resume),
                Share(quantum=max(args.lm_quantum, 1),
@@ -151,6 +179,33 @@ def main(argv=None):
         print(f"[gateway] lm={args.arch} "
               f"({'smoke' if not args.full_lm else 'full'}): "
               f"{args.batch}x{args.prompt_len} prompt, {args.gen} steps")
+
+    if listen:
+        from ..serve.rpc import GatewayRPCServer
+
+        server = GatewayRPCServer(gw, graph_wl, host=args.host,
+                                  port=args.listen,
+                                  get_pattern=get_pattern)
+
+        def on_ready(host, port):
+            print(f"[gateway] listening on {host}:{port}", flush=True)
+            if args.port_file:
+                import os
+                tmp = args.port_file + ".tmp"
+                with open(tmp, "w") as f:
+                    f.write(f"{host} {port}\n")
+                os.replace(tmp, args.port_file)
+
+        server.serve_forever(on_ready=on_ready)
+        s = engine.summary()
+        print(f"[gateway] served {server.rounds} rounds over "
+              f"{server.connections} connection(s): "
+              f"{s['requests_resolved']} requests, "
+              f"{s['executions']} executions, {s['coalesced']} coalesced, "
+              f"{s['preemptions']} preemptions, "
+              f"{s['rejections']} rejected")
+        finish_tracing(args, registry=metrics, tag="gateway")
+        return 0
 
     gw.run()
 

@@ -358,7 +358,10 @@ def enc_kv(p: Params, enc_out, cfg, dtype):
 # --------------------------------------------------- decode (KV cache) ----
 def attention_decode(p: Params, x, cache_k, cache_v, pos, cfg, dtype,
                      positions3=None):
-    """One-token decode: x [B,1,d]; cache [B,S,K,hd]; pos scalar int.
+    """One-token decode: x [B,1,d]; cache [B,S,K,hd]; pos scalar int OR a
+    per-row ``[B]`` int vector (continuous batching: each slot of the
+    padded batch sits at its own sequence position — admissions mid-
+    decode are what make the vector form necessary, DESIGN.md §5).
 
     The cache sequence axis may be sharded over the mesh `model` axis;
     the softmax reductions below are partitioner-safe (GSPMD inserts the
@@ -366,16 +369,25 @@ def attention_decode(p: Params, x, cache_k, cache_v, pos, cfg, dtype,
     """
     B = x.shape[0]
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    posv = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    posv = pos[:, None] if per_row else jnp.full((B, 1), pos, jnp.int32)
     if cfg.mrope and positions3 is None:
         positions3 = jnp.broadcast_to(posv[:, None, :], (B, 3, 1))
     q, k, v = _qkv(p, x, cfg, dtype, posv, positions3)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0)
-    )
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0)
-    )
+    if per_row:
+        # each row writes its token at its own position
+        row_upd = jax.vmap(
+            lambda c, u, pp: jax.lax.dynamic_update_slice(c, u, (pp, 0, 0)))
+        cache_k = row_upd(cache_k, k.astype(cache_k.dtype), pos)
+        cache_v = row_upd(cache_v, v.astype(cache_v.dtype), pos)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0)
+        )
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0)
+        )
     S = cache_k.shape[1]
     G = H // K
     qh = q.reshape(B, 1, K, G, hd)
@@ -383,7 +395,8 @@ def attention_decode(p: Params, x, cache_k, cache_v, pos, cfg, dtype,
         "bqkgh,bskh->bkgqs", qh, cache_k.astype(dtype)
     ) / math.sqrt(hd)
     scores = scores.astype(jnp.float32)
-    mask = jnp.arange(S)[None, None, None, None, :] <= pos
+    # [B,1,1,1,S] per-row causal horizon (broadcasts over heads/groups)
+    mask = (jnp.arange(S)[None, :] <= posv)[:, None, None, None, :]
     scores = jnp.where(mask, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1).astype(dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", w, cache_v.astype(dtype))

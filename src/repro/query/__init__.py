@@ -5,11 +5,13 @@
 from .canon import canonical_form, canonical_key, relabeled_variant
 from .cache import CacheEntry, PlanCache
 from .engine import (
-    PlannedQuery, QueryEngine, QueryRequest, QueryResult, Ticket,
+    AdmissionRejected, PlannedQuery, QueryEngine, QueryRequest, QueryResult,
+    Rejection, Ticket,
 )
 from .store import PlanStore, StoreRecord
 
 __all__ = [
+    "AdmissionRejected",
     "CacheEntry",
     "PlanCache",
     "PlanStore",
@@ -17,6 +19,7 @@ __all__ = [
     "QueryEngine",
     "QueryRequest",
     "QueryResult",
+    "Rejection",
     "StoreRecord",
     "Ticket",
     "canonical_form",

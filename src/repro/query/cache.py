@@ -108,6 +108,23 @@ class CacheEntry:
             out = self.matcher.count()
         else:
             out = self.matcher.count(chunk=chunk)
+        return self._finish(out)
+
+    def count_partial(self, state=None, *, chunk: int | None = None,
+                      max_dispatches: int | None = None):
+        """Preemptible execution: run up to `max_dispatches` kernel
+        dispatches and return ``(state, result)`` — result None while
+        work remains (pass state back in to resume; the completed count
+        is bit-identical to :meth:`count`).  Sharded programs fix their
+        stripe layout in one scanned dispatch, so they ignore the budget
+        and always complete (state stays None)."""
+        if self.sharded:
+            return None, self._finish(self.matcher.count())
+        state, out = self.matcher.count_partial(
+            state, chunk=chunk, max_dispatches=max_dispatches)
+        return state, (None if out is None else self._finish(out))
+
+    def _finish(self, out: CountResult) -> CountResult:
         if self.mode == "naive":
             # no restrictions compiled in: every embedding found |Aut| times
             out = dc_replace(out, count=out.count // self.pattern.aut_count())

@@ -15,7 +15,10 @@ so the serving Gateway can schedule it against other mesh tenants:
   * ``plan(request)``    — cache/plan resolution only (search + JIT on
                            a miss); never executes a count.
   * ``enqueue(request)`` — admit a request, returning a :class:`Ticket`
-                           that resolves later.
+                           that resolves later (raises
+                           :class:`AdmissionRejected` past the
+                           per-tenant depth bound; ``try_enqueue``
+                           returns the :class:`Rejection` instead).
   * ``run_pending(limit)`` — execute up to ``limit`` queued tickets as
                            one round, COALESCING tickets of the same
                            isomorphism class (× mode × use_iep) into a
@@ -23,14 +26,28 @@ so the serving Gateway can schedule it against other mesh tenants:
                            cost one kernel dispatch, and the N−1
                            riders are accounted as cache hits.
 
+MULTI-TENANCY.  Every request carries a ``tenant`` id; queued tickets
+live in per-tenant FIFO queues drained by deterministic weighted
+round-robin (``tenant_shares``), each tenant's depth bounded by
+``tenant_depth`` (admission control: reject-with-reason, counted).
+PREEMPTION.  With ``preempt_dispatches=k`` a round issues at most `k`
+kernel dispatches: a class whose chunked outer loop is mid-flight
+checkpoints its span stack (`CountState`) and resumes NEXT round —
+rotated behind any other waiting class, so one huge query cannot
+monopolize the device.  A preempted-and-resumed count is bit-identical
+to an uninterrupted one (the state is the exact work stack + raw
+totals).
+
 ``submit()``/``serve()`` remain as deprecated synchronous shims (one
 request per round — the exact pre-Gateway behaviour).  Per-query wall
 latency is recorded; `summary()` reports p50/p99 plus the cache
-counters that prove hits never re-search or re-compile.
+counters that prove hits never re-search or re-compile;
+``tenant_report()`` adds per-tenant p50/p99 and admission counters.
 """
 from __future__ import annotations
 
 import warnings
+from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
@@ -44,6 +61,9 @@ from .cache import DEFAULT_MAX_ENTRIES, CacheEntry, PlanCache
 from .canon import canonical_key
 
 
+DEFAULT_TENANT = "default"
+
+
 @dataclass(frozen=True)
 class QueryRequest:
     """One pattern-count request (per-request options ride along)."""
@@ -52,6 +72,7 @@ class QueryRequest:
     use_iep: bool = False
     verify: bool = False          # check against the pure-python oracle
     mode: str = "graphpi"
+    tenant: str = DEFAULT_TENANT  # multi-tenant queue / fairness id
 
 
 @dataclass
@@ -98,6 +119,27 @@ class PlannedQuery:
     cache_hit: bool
 
 
+@dataclass(frozen=True)
+class Rejection:
+    """Why admission control refused a request (deterministic, counted)."""
+
+    tenant: str
+    reason: str
+    depth: int                    # tenant's queue depth at rejection time
+    limit: int                    # the configured bound it hit
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by :meth:`QueryEngine.enqueue` when a tenant's queue is at
+    its depth bound; carries the structured :class:`Rejection`."""
+
+    def __init__(self, rejection: Rejection):
+        super().__init__(
+            f"tenant {rejection.tenant!r} rejected: {rejection.reason} "
+            f"(depth={rejection.depth}, limit={rejection.limit})")
+        self.rejection = rejection
+
+
 @dataclass
 class Ticket:
     """Handle for an enqueued request; resolves when a round executes it
@@ -106,6 +148,7 @@ class Ticket:
     request: QueryRequest
     seq: int
     _result: QueryResult | None = None
+    cancelled: bool = False
 
     @property
     def done(self) -> bool:
@@ -118,6 +161,19 @@ class Ticket:
                 f"ticket #{self.seq} not resolved yet — run the engine's "
                 f"pending queue (run_pending) or schedule it via the Gateway")
         return self._result
+
+
+@dataclass
+class _InFlight:
+    """One isomorphism-class group mid-round: its tickets, the resolved
+    plan (lazy), and the resumable count checkpoint (`CountState`) when a
+    preemption budget suspended it between kernel dispatches."""
+
+    key: tuple
+    tickets: list
+    planned: PlannedQuery | None = None
+    state: object | None = None   # core.executor.CountState when started
+    seconds: float = 0.0          # accumulated plan + execute wall time
 
 
 class QueryEngine:
@@ -134,6 +190,14 @@ class QueryEngine:
              bound frontier memory and give the overflow bisection finer
              grain at the price of more kernel dispatches per query
              (latency/footprint trade-off, DESIGN.md §5).
+    tenant_depth:  admission bound — max queued (unresolved, uncancelled)
+             tickets per tenant; ``None`` (default) admits everything.
+    tenant_shares: tickets drained per tenant per take-cycle of the
+             weighted round-robin (missing tenants weigh 1).
+    preempt_dispatches: default per-round kernel-dispatch budget; a class
+             still mid-count when the budget runs out is checkpointed and
+             rotated behind other waiting classes.  ``None`` = run every
+             class in the round to completion (pre-preemption behaviour).
     """
 
     def __init__(self, graph: GraphCSR, *, cfg: ExecutorConfig | None = None,
@@ -141,7 +205,10 @@ class QueryEngine:
                  cache: PlanCache | None = None,
                  store=None,
                  stats: GraphStats | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 tenant_depth: int | None = None,
+                 tenant_shares: dict[str, int] | None = None,
+                 preempt_dispatches: int | None = None):
         self.graph = graph
         self.cfg = cfg or ExecutorConfig()
         self.mesh = mesh
@@ -176,12 +243,20 @@ class QueryEngine:
         self.metrics.register_collector(self._collect)
         self._edges = None                     # lazy, for oracle verification
         self._oracle: dict[str, int] = {}      # canon_key -> oracle count
-        self._pending: list[Ticket] = []
+        self._queues: dict[str, deque] = {}    # tenant -> FIFO of Tickets
+        self._inflight: deque = deque()        # _InFlight groups, mid-round
         self._seq = 0
-        # round-execution counters (the coalescing evidence)
+        self.tenant_depth = tenant_depth
+        self.tenant_shares = dict(tenant_shares or {})
+        self.preempt_dispatches = preempt_dispatches
+        # round-execution counters (the coalescing/preemption evidence)
         self.requests_resolved = 0
-        self.executions = 0                    # entry.count() dispatches
+        self.executions = 0                    # completed class executions
         self.coalesced = 0                     # tickets riding an execution
+        self.preemptions = 0                   # groups suspended mid-count
+        self.last_round_dispatches = 0         # kernel dispatches last round
+        self.rejections: dict[str, int] = {}   # tenant -> admission rejects
+        self._resolved_by_tenant: dict[str, int] = {}
 
     def _collect(self) -> dict:
         """Engine/cache/store counters for `metrics.snapshot()` — the
@@ -191,7 +266,10 @@ class QueryEngine:
             "engine.requests_resolved": self.requests_resolved,
             "engine.executions": self.executions,
             "engine.coalesced": self.coalesced,
-            "engine.pending": len(self._pending),
+            "engine.pending": self.pending(),
+            "engine.inflight": self.inflight(),
+            "engine.preemptions": self.preemptions,
+            "engine.admission_rejected": sum(self.rejections.values()),
             "engine.cache_entries": len(self.cache),
         }
         for k, v in self.cache.stats.as_dict().items():
@@ -217,16 +295,59 @@ class QueryEngine:
             sp.set(cache_hit=hit, canon_key=entry.canon_key)
         return PlannedQuery(entry=entry, cache_hit=hit)
 
-    def enqueue(self, request: QueryRequest) -> Ticket:
-        """Admit a request; the returned ticket resolves when a round
-        executes it (:meth:`run_pending`, or the Gateway's scheduler)."""
+    def try_enqueue(self, request: QueryRequest) -> Ticket | Rejection:
+        """Admission-controlled enqueue: returns a :class:`Ticket`, or a
+        :class:`Rejection` when the request's tenant already has
+        ``tenant_depth`` tickets queued.  Rejections are deterministic
+        (a pure function of the queue depth at call time) and counted
+        per tenant (``rejections`` / ``engine.admission_rejected``)."""
+        tenant = request.tenant
+        q = self._queues.setdefault(tenant, deque())
+        if self.tenant_depth is not None and len(q) >= self.tenant_depth:
+            self.rejections[tenant] = self.rejections.get(tenant, 0) + 1
+            self.metrics.counter("engine.admission_rejected",
+                                 tenant=tenant).inc()
+            return Rejection(tenant=tenant, reason="queue depth bound",
+                             depth=len(q), limit=self.tenant_depth)
         ticket = Ticket(request=request, seq=self._seq)
         self._seq += 1
-        self._pending.append(ticket)
+        q.append(ticket)
         return ticket
 
-    def pending(self) -> int:
-        return len(self._pending)
+    def enqueue(self, request: QueryRequest) -> Ticket:
+        """Admit a request; the returned ticket resolves when a round
+        executes it (:meth:`run_pending`, or the Gateway's scheduler).
+        Raises :class:`AdmissionRejected` past the tenant depth bound."""
+        out = self.try_enqueue(request)
+        if isinstance(out, Rejection):
+            raise AdmissionRejected(out)
+        return out
+
+    def cancel(self, ticket: Ticket) -> bool:
+        """Withdraw a still-queued ticket (marks it ``cancelled`` and
+        removes it from its tenant queue).  Returns False when the ticket
+        already resolved, was cancelled before, or is mid-execution in an
+        in-flight group (a dispatched count is not torn down)."""
+        if ticket.done or ticket.cancelled:
+            return False
+        q = self._queues.get(ticket.request.tenant)
+        if q is None or ticket not in q:
+            return False
+        q.remove(ticket)
+        ticket.cancelled = True
+        return True
+
+    def pending(self, tenant: str | None = None) -> int:
+        """Queued (not yet taken into a round) ticket count — one tenant
+        or all."""
+        if tenant is not None:
+            return len(self._queues.get(tenant, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    def inflight(self) -> int:
+        """Tickets taken into a round whose class is still mid-count
+        (checkpointed by the preemption budget, resumes next round)."""
+        return sum(len(f.tickets) for f in self._inflight)
 
     @staticmethod
     def _group_key(request: QueryRequest) -> tuple:
@@ -235,7 +356,28 @@ class QueryEngine:
         use_iep = bool(request.use_iep) and request.mode != "naive"
         return (canonical_key(request.pattern), request.mode, use_iep)
 
-    def run_pending(self, limit: int | None = None) -> list[Ticket]:
+    def _take_tickets(self, limit: int | None) -> list[Ticket]:
+        """Drain up to ``limit`` tickets across tenant queues by
+        deterministic weighted round-robin: tenants are visited in
+        first-seen order, each yielding up to ``tenant_shares[tenant]``
+        (default 1) tickets per cycle, until the limit or every queue is
+        empty.  A single tenant degenerates to exact FIFO."""
+        out: list[Ticket] = []
+        while limit is None or len(out) < limit:
+            progressed = False
+            for tenant, q in self._queues.items():
+                share = max(int(self.tenant_shares.get(tenant, 1)), 1)
+                for _ in range(share):
+                    if not q or (limit is not None and len(out) >= limit):
+                        break
+                    out.append(q.popleft())
+                    progressed = True
+            if not progressed:
+                break
+        return out
+
+    def run_pending(self, limit: int | None = None, *,
+                    max_dispatches: int | None = None) -> list[Ticket]:
         """Execute up to ``limit`` queued tickets as ONE round.
 
         Tickets whose requests fall in the same isomorphism class (and
@@ -243,50 +385,104 @@ class QueryEngine:
         once, and every rider ticket resolves with that count — riders
         are accounted as cache hits (they never search, compile, or
         dispatch).  Distinct classes in the round are micro-batched
-        back-to-back against the warmed resident graph.  Returns the
-        resolved tickets in admission order.
+        back-to-back against the warmed resident graph.
+
+        With a dispatch budget (``max_dispatches`` here, or the engine's
+        ``preempt_dispatches`` default) the round is PREEMPTIVE: once the
+        budget is spent, the mid-count class checkpoints its chunk stack
+        and rotates to the back of the in-flight queue; the next round
+        resumes it after any other waiting classes.  Tickets of a
+        suspended class resolve in the round that completes it.
+
+        Returns the tickets resolved THIS round, in admission order.
         """
         if limit is not None and limit < 0:
             # a negative slice would silently drop the newest tickets
             raise ValueError(f"limit must be >= 0, got {limit}")
-        take = self._pending if limit is None else self._pending[:limit]
-        take = list(take)
-        del self._pending[:len(take)]
-        if not take:
-            return []
-        groups: dict[tuple, list[Ticket]] = {}
+        budget_n = (self.preempt_dispatches if max_dispatches is None
+                    else max_dispatches)
+        remaining = None if budget_n is None else max(int(budget_n), 1)
+        self.last_round_dispatches = 0
+        take = self._take_tickets(limit)
+        fresh = 0
         for t in take:
-            groups.setdefault(self._group_key(t.request), []).append(t)
+            key = self._group_key(t.request)
+            fl = next((f for f in self._inflight if f.key == key), None)
+            if fl is not None:
+                # same class already mid-round: ride its execution
+                fl.tickets.append(t)
+            else:
+                self._inflight.append(_InFlight(key=key, tickets=[t]))
+                fresh += 1
+        if not self._inflight:
+            return []
+        resolved: list[Ticket] = []
         with get_tracer().span("engine.round", tickets=len(take),
-                               groups=len(groups),
-                               coalesced=len(take) - len(groups)):
-            for tickets in groups.values():
-                self._execute_group(tickets)
-        return take
+                               groups=fresh,
+                               coalesced=len(take) - fresh,
+                               budget=-1 if remaining is None else remaining):
+            while self._inflight:
+                if remaining is not None and remaining <= 0:
+                    break
+                fl = self._inflight.popleft()
+                done, used = self._run_group(fl, remaining)
+                self.last_round_dispatches += used
+                if remaining is not None:
+                    remaining -= used
+                if done:
+                    resolved.extend(fl.tickets)
+                else:
+                    # suspended mid-count: rotate BEHIND other waiting
+                    # classes so they complete between this one's quanta
+                    self.preemptions += 1
+                    self._inflight.append(fl)
+        resolved.sort(key=lambda t: t.seq)
+        return resolved
 
-    def _execute_group(self, tickets: list[Ticket]) -> None:
-        lead = tickets[0].request
-        with timer() as t_all:
-            planned = self.plan(lead)
-            entry, hit = planned.entry, planned.cache_hit
-            with get_tracer().span(
-                    "engine.execute", pattern=lead.pattern.name or "anon",
-                    canon_key=entry.canon_key, cache_hit=hit,
-                    riders=len(tickets) - 1):
-                out = entry.count(chunk=self.chunk)
-            entry.executions += 1
-            self.executions += 1
-        latency = t_all.seconds
+    def _run_group(self, fl: _InFlight,
+                   remaining: int | None) -> tuple[bool, int]:
+        """Start or resume one class group under a dispatch budget.
+        Returns (completed, dispatches_used); on completion every ticket
+        in the group is resolved with the (bit-identical) final count."""
+        lead = fl.tickets[0].request
+        if fl.planned is None:
+            with timer() as t_plan:
+                fl.planned = self.plan(lead)
+            fl.seconds += t_plan.seconds
+        entry, hit = fl.planned.entry, fl.planned.cache_hit
+        before = 0 if fl.state is None else fl.state.dispatches
+        with get_tracer().span(
+                "engine.execute", pattern=lead.pattern.name or "anon",
+                canon_key=entry.canon_key, cache_hit=hit,
+                riders=len(fl.tickets) - 1,
+                resumed=fl.state is not None):
+            with timer() as t_run:
+                fl.state, out = entry.count_partial(
+                    fl.state, chunk=self.chunk, max_dispatches=remaining)
+            fl.seconds += t_run.seconds
+        # sharded counts report no per-dispatch state (one logical unit)
+        used = (1 if fl.state is None
+                else max(fl.state.dispatches - before, 0))
+        if out is None:
+            return False, used
+        entry.executions += 1
+        self.executions += 1
+        latency = fl.seconds
 
         expected = None
-        if any(t.request.verify for t in tickets):
+        if any(t.request.verify for t in fl.tickets):
             with get_tracer().span("engine.verify",
                                    canon_key=entry.canon_key):
                 expected = self._oracle_count(entry.canon_key,
                                               lead.pattern)
-        for j, t in enumerate(tickets):
+        for j, t in enumerate(fl.tickets):
             self._lat_hist.observe(latency * 1e3)
+            self.metrics.histogram("engine.query_latency_ms",
+                                   tenant=t.request.tenant).observe(
+                                       latency * 1e3)
             self.requests_resolved += 1
+            self._resolved_by_tenant[t.request.tenant] = (
+                self._resolved_by_tenant.get(t.request.tenant, 0) + 1)
             if j > 0:
                 # a coalesced rider is a logical cache hit: it was served
                 # without a search, a compile, or its own dispatch
@@ -315,6 +511,7 @@ class QueryEngine:
                 verified=verified,
                 coalesced=j > 0,
             )
+        return True, used
 
     def _oracle_count(self, canon_key: str, pattern: Pattern) -> int:
         # oracle counts are (label-)isomorphism-invariant — memoize per
@@ -344,7 +541,7 @@ class QueryEngine:
         ticket = self.enqueue(request)
         # the queue is FIFO: earlier enqueue()d tickets (if any) resolve
         # first, one per round, until ours does
-        while not ticket.done and self.pending():
+        while not ticket.done and (self.pending() or self.inflight()):
             self.run_pending(limit=1)
         return ticket.result
 
@@ -358,7 +555,7 @@ class QueryEngine:
         out = []
         for r in requests:
             ticket = self.enqueue(r)
-            while not ticket.done and self.pending():
+            while not ticket.done and (self.pending() or self.inflight()):
                 self.run_pending(limit=1)
             out.append(ticket.result)
         return out
@@ -387,11 +584,33 @@ class QueryEngine:
         benchmark harness)."""
         self.reset_window()
 
-    def latency_percentiles(self) -> dict:
+    def latency_percentiles(self, tenant: str | None = None) -> dict:
         """Per-query wall-latency summary from the registry histogram
-        (`engine.query_latency_ms`) — same keys as the Gateway's
-        per-turn summaries: n / p50_ms / p95_ms / p99_ms / mean_ms."""
-        return latency_summary(self._lat_hist)
+        (`engine.query_latency_ms`, optionally the per-tenant labelled
+        series) — same keys as the Gateway's per-turn summaries:
+        n / p50_ms / p95_ms / p99_ms / mean_ms."""
+        if tenant is None:
+            return latency_summary(self._lat_hist)
+        return latency_summary(
+            self.metrics.histogram("engine.query_latency_ms", tenant=tenant))
+
+    def tenant_report(self) -> dict:
+        """Per-tenant serving report: resolved / rejected / queued depths
+        plus the tenant's own latency percentiles (the gateway report and
+        `benchmarks/gateway_mix.py` read p99 from here)."""
+        tenants = sorted(set(self._queues)
+                         | set(self._resolved_by_tenant)
+                         | set(self.rejections))
+        out = {}
+        for t in tenants:
+            out[t] = {
+                "resolved": self._resolved_by_tenant.get(t, 0),
+                "rejected": self.rejections.get(t, 0),
+                "pending": self.pending(t),
+                "share": max(int(self.tenant_shares.get(t, 1)), 1),
+                "latency": self.latency_percentiles(t),
+            }
+        return out
 
     def summary(self) -> dict:
         out = {
@@ -405,6 +624,9 @@ class QueryEngine:
             "requests_resolved": self.requests_resolved,
             "executions": self.executions,
             "coalesced": self.coalesced,
+            "preemptions": self.preemptions,
+            "rejections": sum(self.rejections.values()),
+            "tenants": self.tenant_report(),
         }
         if self.cache.store is not None:
             out["store"] = self.cache.store.stats.as_dict()

@@ -89,12 +89,20 @@ class GraphQueryWorkload:
                 self.engine.plan(t.request)
 
     def ready(self) -> bool:
-        return self.engine.pending() > 0
+        # a preempted class (taken off the queue, mid-count) still needs
+        # rounds to finish — inflight work keeps the workload hot
+        return self.engine.pending() > 0 or self.engine.inflight() > 0
 
     def step(self, quantum: int) -> StepReport:
         with timer() as t:
             resolved = self.engine.run_pending(limit=quantum)
-        return StepReport(items=len(resolved), seconds=t.seconds)
+        # a fully-preempted quantum resolves zero tickets but dispatched
+        # real kernels: report progress so the scheduler keeps rounds
+        # coming (StepReport.progressed, scheduler stall-break)
+        return StepReport(
+            items=len(resolved), seconds=t.seconds,
+            progressed=bool(resolved)
+            or self.engine.last_round_dispatches > 0)
 
     def results(self):
         """Resolved results in admission order (unresolved tickets are
@@ -108,7 +116,11 @@ class GraphQueryWorkload:
             "executions": eng.executions,
             "coalesced": eng.coalesced,
             "pending": eng.pending(),
+            "inflight": eng.inflight(),
+            "preemptions": eng.preemptions,
+            "rejections": sum(eng.rejections.values()),
             "latency": eng.latency_percentiles(),
+            "tenants": eng.tenant_report(),
             "cache_hits": eng.cache.stats.hits,
             "cache_misses": eng.cache.stats.misses,
         }
@@ -164,6 +176,7 @@ class Gateway:
     workloads: list = field(default_factory=list)
     trace: object = None
     metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+    _warmed: bool = field(default=False, repr=False)
 
     def add(self, workload: Workload, share: Share | None = None):
         if any(w.name == workload.name for w in self.workloads):
@@ -178,6 +191,21 @@ class Gateway:
                                workloads=len(self.workloads)):
             for w in self.workloads:
                 w.warmup()
+        self._warmed = True
+
+    def run_round(self) -> tuple[int, bool] | None:
+        """Drive exactly ONE scheduler round (warm first, once).  The
+        async RPC server's event loop calls this between socket reads so
+        N remote clients share the resident graph without threads.
+        Returns None when no workload is ready, else (items, progressed)
+        — the trace accumulates across calls."""
+        if not self._warmed:
+            self.warmup()
+        if self.trace is None:
+            from .scheduler import ScheduleTrace
+            self.trace = ScheduleTrace()
+        return self.scheduler.run_round(self.workloads, self.trace,
+                                        metrics=self.metrics)
 
     def run(self, *, max_rounds: int | None = None, warmup: bool = True):
         """Warm every workload, then drive scheduler rounds until all

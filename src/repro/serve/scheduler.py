@@ -33,6 +33,15 @@ class StepReport:
 
     items: int                   # work units completed (<= quantum)
     seconds: float               # wall time of the step
+    # preemptive workloads can burn a whole turn mid-item (a suspended
+    # query resolves zero tickets yet dispatched real kernels): they set
+    # `progressed` explicitly so the stall-break doesn't kill the loop.
+    # None (the default) keeps the legacy meaning: progress == items > 0.
+    progressed: bool | None = None
+
+    @property
+    def made_progress(self) -> bool:
+        return self.items > 0 if self.progressed is None else self.progressed
 
 
 @runtime_checkable
@@ -127,50 +136,65 @@ class RoundScheduler:
         histograms (phase solo|contended) — the same split the Gateway
         report derives from the trace, but windowed/resettable.
         """
+        trace = ScheduleTrace()
+        while max_rounds is None or trace.rounds < max_rounds:
+            out = self.run_round(workloads, trace, metrics=metrics)
+            if out is None:
+                break
+            _, progressed = out
+            if not progressed:
+                # every ready workload declined to make progress — a
+                # buggy tenant must not spin the gateway forever
+                break
+        return trace
+
+    def run_round(self, workloads: list[Workload], trace: ScheduleTrace,
+                  *, metrics=None) -> tuple[int, bool] | None:
+        """Drive exactly ONE round (the unit the async RPC front door
+        interleaves with socket traffic).  Returns ``None`` when no
+        workload is ready, else ``(items, progressed)`` — `progressed`
+        aggregates :attr:`StepReport.made_progress` so a preempted query
+        quantum (zero tickets resolved, real kernels dispatched) still
+        counts as forward motion."""
         tr = get_tracer()
         order = sorted(
             range(len(workloads)),
             key=lambda i: (-self.share_of(workloads[i].name).priority, i),
         )
-        trace = ScheduleTrace()
-        rnd = 0
-        while max_rounds is None or rnd < max_rounds:
-            ready = [i for i in order if workloads[i].ready()]
-            if not ready:
-                break
-            contended = len(ready) > 1
-            round_items = 0
-            with tr.span("scheduler.round", round=rnd,
-                         ready=len(ready)) as rsp:
-                for i in ready:
-                    w = workloads[i]
-                    share = self.share_of(w.name)
-                    for _ in range(max(share.weight, 1)):
-                        if not w.ready():
-                            break
-                        with tr.span("scheduler.turn", workload=w.name,
-                                     round=rnd,
-                                     contended=contended) as tsp, \
-                                timer() as t:
-                            rep = w.step(max(share.quantum, 1))
-                            tsp.set(items=rep.items)
-                        dt = t.seconds
-                        round_items += rep.items
-                        seconds = rep.seconds if rep.seconds > 0 else dt
-                        trace.turns.append(Turn(
-                            round=rnd, name=w.name, items=rep.items,
-                            seconds=seconds, contended=contended,
-                        ))
-                        if metrics is not None and rep.items > 0:
-                            metrics.histogram(
-                                "scheduler.turn_item_ms", workload=w.name,
-                                phase="contended" if contended else "solo",
-                            ).observe(seconds / rep.items * 1e3)
-                rsp.set(items=round_items)
-            rnd += 1
-            if round_items == 0:
-                # every ready workload declined to make progress — a
-                # buggy tenant must not spin the gateway forever
-                break
-        trace.rounds = rnd
-        return trace
+        ready = [i for i in order if workloads[i].ready()]
+        if not ready:
+            return None
+        rnd = trace.rounds
+        contended = len(ready) > 1
+        round_items = 0
+        round_progress = False
+        with tr.span("scheduler.round", round=rnd,
+                     ready=len(ready)) as rsp:
+            for i in ready:
+                w = workloads[i]
+                share = self.share_of(w.name)
+                for _ in range(max(share.weight, 1)):
+                    if not w.ready():
+                        break
+                    with tr.span("scheduler.turn", workload=w.name,
+                                 round=rnd,
+                                 contended=contended) as tsp, \
+                            timer() as t:
+                        rep = w.step(max(share.quantum, 1))
+                        tsp.set(items=rep.items)
+                    dt = t.seconds
+                    round_items += rep.items
+                    round_progress = round_progress or rep.made_progress
+                    seconds = rep.seconds if rep.seconds > 0 else dt
+                    trace.turns.append(Turn(
+                        round=rnd, name=w.name, items=rep.items,
+                        seconds=seconds, contended=contended,
+                    ))
+                    if metrics is not None and rep.items > 0:
+                        metrics.histogram(
+                            "scheduler.turn_item_ms", workload=w.name,
+                            phase="contended" if contended else "solo",
+                        ).observe(seconds / rep.items * 1e3)
+            rsp.set(items=round_items)
+        trace.rounds += 1
+        return round_items, round_progress

@@ -280,6 +280,53 @@ def test_lmsession_resume_without_checkpoint_prefills(tmp_path):
     assert s.remaining == 1
 
 
+# ------------------------------------------------ continuous LM batching
+def test_lmsession_continuous_batching_bit_exact():
+    """Evict one sequence mid-decode and admit a fresh one into its
+    slot: the evicted prefix and the UNDISTURBED row must both be
+    bit-identical to an uninterrupted reference run — admission touches
+    only the freed slot's cache rows."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serve.session import LMSession
+
+    kw = dict(smoke=True, batch=2, prompt_len=8, gen=4, seed=0)
+    full = LMSession("qwen3-1.7b", **kw)
+    full.start()
+    while full.remaining:
+        full.decode_steps(4)
+    ref = full.tokens_out()                # [2, 5]: prefill tok + 4 steps
+
+    reg = MetricsRegistry()
+    s = LMSession("qwen3-1.7b", **kw, metrics=reg)
+    s.start()
+    assert s.metrics()["slots_active"] == 2
+    s.decode_steps(2)
+    gone = s.evict(1)
+    np.testing.assert_array_equal(gone, ref[1, :3])   # prefill + 2 steps
+    assert s.slots()[1]["active"] is False
+    with pytest.raises(ValueError):
+        s.evict(1)                         # double-evict refused
+    slot = s.admit(seed=12345)             # joins mid-decode at pos S
+    assert slot == 1
+    assert s.slots()[1] == {"active": True, "pos": 8, "taken": 0,
+                            "budget": 4}
+    with pytest.raises(RuntimeError):
+        s.admit()                          # batch full again
+    while s.remaining:                     # newbie owes 4 more steps
+        s.decode_steps(2)
+    row0 = s.evict(0)
+    np.testing.assert_array_equal(row0, ref[0])   # undisturbed row exact
+    newbie = s.evict(1)
+    assert newbie.shape == (5,)            # its own prefill + 4 steps
+    assert not np.array_equal(newbie, ref[1])     # genuinely a new prompt
+    m = s.metrics()
+    assert (m["admitted"], m["evicted"], m["slots_active"]) == (1, 3, 0)
+    snap = reg.snapshot()
+    assert snap["lm.admitted"] == 1
+    assert snap["lm.evicted"] == 3
+    assert snap["lm.slots_active"] == 0
+
+
 # --------------------------------------------------- model bucket layout
 def test_predicted_frontier_occupancy_edge_weighted():
     deg = np.array([1, 1, 2, 4], dtype=np.int32)

@@ -1,0 +1,247 @@
+"""Preemptive graph quanta + multi-tenant admission (ISSUE 9).
+
+The load-bearing claims: a count preempted mid-isomorphism-class and
+resumed across rounds is BIT-IDENTICAL to its uninterrupted twin; a
+suspended class rotates behind other waiting classes (budget sharing);
+weighted round-robin keeps an adversarially-huge tenant from starving a
+small one; admission rejection is deterministic and counted; and the
+scheduler keeps granting rounds to a workload that dispatches kernels
+without resolving tickets (StepReport.progressed)."""
+import pytest
+
+from repro.configs.graphpi import get_pattern
+from repro.core.executor import ExecutorConfig, compute_stats
+from repro.graph.datasets import erdos_renyi
+from repro.query import (
+    AdmissionRejected, QueryEngine, QueryRequest, Rejection,
+)
+from repro.serve.gateway import (
+    Gateway, GraphQueryWorkload, RoundScheduler, Share, StepReport,
+)
+
+CFG = ExecutorConfig(capacity=1 << 12)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return erdos_renyi(64, 256, seed=7, name="er64")
+
+
+@pytest.fixture(scope="module")
+def stats(graph):
+    return compute_stats(graph, CFG)
+
+
+@pytest.fixture(scope="module")
+def reference_counts(graph, stats):
+    """Uninterrupted counts (chunk=8, no budget) for the patterns the
+    preemption tests replay."""
+    eng = QueryEngine(graph, cfg=CFG, stats=stats, chunk=8)
+    out = {}
+    for name in ("triangle", "P1", "P3"):
+        t = eng.enqueue(QueryRequest(get_pattern(name)))
+        eng.run_pending()
+        out[name] = (t.result.count, eng.last_round_dispatches)
+    return out
+
+
+# ----------------------------------------------------- count bit-identity
+def test_preempted_count_bit_identical(graph, stats, reference_counts):
+    """max_dispatches=1: every round runs ONE kernel dispatch and
+    checkpoints; the final count matches the uninterrupted run exactly,
+    and intermediate rounds resolve nothing."""
+    ref_count, ref_dispatches = reference_counts["P3"]
+    eng = QueryEngine(graph, cfg=CFG, stats=stats, chunk=8,
+                      preempt_dispatches=1)
+    t = eng.enqueue(QueryRequest(get_pattern("P3")))
+    rounds = 0
+    while not t.done:
+        resolved = eng.run_pending()
+        rounds += 1
+        assert rounds <= ref_dispatches
+        if not t.done:
+            assert resolved == []          # suspended: nothing resolves
+            assert eng.inflight() == 1
+    assert t.result.count == ref_count
+    assert rounds == ref_dispatches        # 1 dispatch per round
+    assert eng.preemptions == rounds - 1
+    assert eng.executions == 1             # one completed class execution
+    assert eng.inflight() == 0
+
+
+def test_default_path_unaffected(graph, stats, reference_counts):
+    """No budget → one round, identical count and dispatch total (the
+    pre-preemption behaviour is the bit-exact default)."""
+    ref_count, ref_dispatches = reference_counts["P1"]
+    eng = QueryEngine(graph, cfg=CFG, stats=stats, chunk=8)
+    t = eng.enqueue(QueryRequest(get_pattern("P1")))
+    resolved = eng.run_pending()
+    assert [x.seq for x in resolved] == [t.seq]
+    assert t.result.count == ref_count
+    assert eng.last_round_dispatches == ref_dispatches
+    assert eng.preemptions == 0
+
+
+def test_mouse_finishes_while_whale_suspended(graph, stats,
+                                              reference_counts):
+    """A suspended class rotates to the BACK of the in-flight queue, so
+    a cheap query enqueued behind a whale completes while the whale is
+    still mid-flight.  Whale = P3 in naive mode (111 dispatches on er64
+    at chunk=8); mouse = triangle (8 dispatches).  Budget 8: rounds 1-2
+    feed the whale, round 3 belongs to the mouse, which finishes with
+    the whale ~95 dispatches from done."""
+    ref_count, _ = reference_counts["P3"]
+    tri_count, tri_dispatches = reference_counts["triangle"]
+    assert tri_dispatches == 8             # layout guard for the schedule
+    eng = QueryEngine(graph, cfg=CFG, stats=stats, chunk=8,
+                      preempt_dispatches=8)
+    whale = eng.enqueue(QueryRequest(get_pattern("P3"), mode="naive",
+                                     tenant="whale"))
+    assert eng.run_pending() == []         # whale: 8/111, suspended
+    assert not whale.done
+    mouse = eng.enqueue(QueryRequest(get_pattern("triangle"),
+                                     tenant="mouse"))
+    eng.run_pending()                      # whale resumes (front), 16/111;
+    #                                        rotates behind the mouse
+    r3 = eng.run_pending()                 # mouse's full-budget round
+    assert mouse.done and not whale.done   # fairness: mouse didn't wait
+    assert [t.seq for t in r3] == [mouse.seq]
+    assert mouse.result.count == tri_count
+    assert eng.inflight() == 1             # whale still checkpointed
+    for _ in range(40):                    # drain the whale
+        if whale.done:
+            break
+        eng.run_pending()
+    assert whale.done
+    assert whale.result.count == ref_count  # naive mode, same class count
+    assert eng.preemptions >= 13           # whale suspended ~14 times
+    assert eng.tenant_report()["mouse"]["resolved"] == 1
+
+
+def test_wrr_keeps_small_tenant_ahead_of_flood(graph, stats):
+    """An adversarial tenant floods 6 tickets; a small tenant's single
+    later ticket is still taken in the first round (weighted round-robin
+    across tenant queues, not global FIFO)."""
+    eng = QueryEngine(graph, cfg=CFG, stats=stats)
+    whale = [eng.enqueue(QueryRequest(get_pattern("triangle"),
+                                      tenant="whale"))
+             for _ in range(6)]
+    mouse = eng.enqueue(QueryRequest(get_pattern("P1"), tenant="mouse"))
+    resolved = eng.run_pending(limit=2)
+    assert mouse.done                      # took 1 whale + 1 mouse
+    assert whale[0].done
+    assert sum(t.done for t in whale) == 1
+    assert eng.pending("whale") == 5
+    assert eng.pending("mouse") == 0
+    assert {t.seq for t in resolved} == {whale[0].seq, mouse.seq}
+    # shares shift the ratio: weight-3 whale drains 3 per cycle
+    eng2 = QueryEngine(graph, cfg=CFG, stats=stats,
+                       tenant_shares={"whale": 3})
+    for _ in range(6):
+        eng2.enqueue(QueryRequest(get_pattern("triangle"), tenant="whale"))
+    m2 = eng2.enqueue(QueryRequest(get_pattern("P1"), tenant="mouse"))
+    eng2.run_pending(limit=4)              # 3 whale + 1 mouse
+    assert m2.done
+    assert eng2.pending("whale") == 3
+
+
+def test_admission_rejection_deterministic_and_counted(graph, stats):
+    eng = QueryEngine(graph, cfg=CFG, stats=stats, tenant_depth=2)
+    tri = get_pattern("triangle")
+    assert not isinstance(eng.try_enqueue(QueryRequest(tri, tenant="A")),
+                          Rejection)
+    assert not isinstance(eng.try_enqueue(QueryRequest(tri, tenant="A")),
+                          Rejection)
+    r1 = eng.try_enqueue(QueryRequest(tri, tenant="A"))
+    r2 = eng.try_enqueue(QueryRequest(tri, tenant="A"))
+    assert r1 == Rejection(tenant="A", reason="queue depth bound",
+                           depth=2, limit=2)
+    assert r1 == r2                        # deterministic
+    assert eng.rejections == {"A": 2}
+    # other tenants are unaffected by A's full queue
+    assert not isinstance(eng.try_enqueue(QueryRequest(tri, tenant="B")),
+                          Rejection)
+    with pytest.raises(AdmissionRejected) as ei:
+        eng.enqueue(QueryRequest(tri, tenant="A"))
+    assert ei.value.rejection.tenant == "A"
+    assert eng.rejections == {"A": 3}
+    snap = eng.metrics.snapshot()
+    assert snap["engine.admission_rejected"] == 3
+    assert snap["engine.admission_rejected{tenant=A}"] == 3
+    # draining the queue reopens admission
+    eng.run_pending()
+    assert not isinstance(eng.try_enqueue(QueryRequest(tri, tenant="A")),
+                          Rejection)
+    rep = eng.tenant_report()
+    assert rep["A"]["rejected"] == 3
+    assert rep["A"]["resolved"] == 2
+    assert rep["A"]["latency"]["n"] == 2
+    assert rep["B"]["rejected"] == 0
+
+
+def test_cancel_queued_ticket(graph, stats):
+    eng = QueryEngine(graph, cfg=CFG, stats=stats)
+    a = eng.enqueue(QueryRequest(get_pattern("triangle")))
+    b = eng.enqueue(QueryRequest(get_pattern("triangle")))
+    assert eng.cancel(a) is True
+    assert a.cancelled and not a.done
+    assert eng.cancel(a) is False          # idempotent
+    resolved = eng.run_pending()
+    assert [t.seq for t in resolved] == [b.seq]
+    assert eng.cancel(b) is False          # already resolved
+
+
+# ----------------------------------------------- scheduler progress flag
+class _Spinner:
+    """ready() forever; progress is scripted per step."""
+
+    def __init__(self, name, flags):
+        self.name = name
+        self.flags = list(flags)
+        self.steps = 0
+
+    def warmup(self):
+        pass
+
+    def ready(self):
+        return bool(self.flags)
+
+    def step(self, quantum):
+        self.steps += 1
+        progressed = self.flags.pop(0)
+        return StepReport(items=0, seconds=0.0, progressed=progressed)
+
+    def metrics(self):
+        return {}
+
+
+def test_scheduler_respects_progress_flag():
+    """items=0 with progressed=True must NOT trip the stall-break (a
+    fully-preempted quantum is forward motion); the first
+    progressed=False round still breaks."""
+    w = _Spinner("w", [True, True, False, True])
+    trace = RoundScheduler().run([w])
+    assert w.steps == 3                    # 2 productive + the stalled one
+    assert trace.rounds == 3
+
+
+def test_gateway_drains_preempted_engine(graph, stats, reference_counts):
+    """End-to-end: an engine with a 1-dispatch budget behind a Gateway
+    resolves everything across many rounds — ready() covers inflight
+    work and StepReport.progressed keeps the scheduler alive."""
+    ref_count, ref_dispatches = reference_counts["triangle"]
+    eng = QueryEngine(graph, cfg=CFG, stats=stats, chunk=8,
+                      preempt_dispatches=1)
+    gw = Gateway()
+    wl = gw.add(GraphQueryWorkload(
+        eng, [QueryRequest(get_pattern("triangle"))]),
+        Share(quantum=4))
+    trace = gw.run()
+    assert trace.rounds >= ref_dispatches  # one dispatch per round
+    (res,) = wl.results()
+    assert res.count == ref_count
+    assert eng.preemptions == ref_dispatches - 1
+    rep = gw.report()["workloads"]["graph"]["metrics"]
+    assert rep["preemptions"] == ref_dispatches - 1
+    assert rep["inflight"] == 0
+    assert rep["tenants"]["default"]["resolved"] == 1
