@@ -1,0 +1,157 @@
+"""Live-graph churn — serve-while-mutating vs drop-and-reload, and
+incremental vs full recount (ISSUE 10 acceptance).
+
+Phase A replays ROUNDS batches of edge churn with queries between each.
+The live path keeps ONE `QueryEngine` (delta overlay, epoch keys):
+mutations land at round boundaries, plans and compiled matchers are
+reused across epochs, only counts re-execute.  The reload path does
+what a frozen engine forces today — rebuild the CSR and a fresh engine
+every batch, paying stats + search + JIT again.  Counts are asserted
+identical between the two paths at every round; the headline ratio is
+queries/s.
+
+Phase B measures incremental count maintenance on a locality-friendly
+ring-lattice: after a full (memoized) count, a single edge insert
+dirties well under 1% of vertices, so the maintainer re-expands only
+the spans owning the dirty neighborhood and carries every other span's
+total forward.  Reported as dispatch and wall-time ratios vs the full
+recount the same engine would otherwise run, asserted oracle-exact.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.executor import ExecutorConfig
+from repro.core.oracle import count_embeddings_oracle
+from repro.graph.csr import GraphCSR
+from repro.query import QueryEngine, QueryRequest
+
+from ._util import Row, emit, fresh_registry, get_pattern, graph_of
+
+QUICK = {"dataset": "tiny-er", "patterns": ["triangle", "P1"],
+         "rounds": 4, "ins": 8, "dels": 4, "capacity": 1 << 14}
+FULL = {"dataset": "small-rmat", "patterns": ["triangle", "P1", "P2"],
+        "rounds": 6, "ins": 32, "dels": 16, "capacity": 1 << 15}
+
+
+def _churn_schedule(graph, seed, rounds, n_ins, n_del):
+    """Deterministic per-round (inserts, deletes) with deletes drawn
+    from the evolving edge set."""
+    rng = np.random.default_rng(seed)
+    edges = set(map(tuple, graph.edge_array().tolist()))
+    sched = []
+    for _ in range(rounds):
+        ins = []
+        while len(ins) < n_ins:
+            u, v = sorted(int(x) for x in rng.integers(0, graph.n, 2))
+            if u != v and (u, v) not in edges and (u, v) not in ins:
+                ins.append((u, v))
+        edges |= set(ins)
+        pool = sorted(edges)
+        dels = [pool[i] for i in
+                rng.choice(len(pool), size=n_del, replace=False)]
+        edges -= set(dels)
+        sched.append((ins, dels, sorted(edges)))
+    return sched
+
+
+def _serve(engine, patterns):
+    tickets = [engine.enqueue(QueryRequest(p)) for p in patterns]
+    while engine.pending() or engine.inflight():
+        engine.run_pending()
+    return [t.result.count for t in tickets]
+
+
+def run(full: bool = False) -> list[Row]:
+    spec = FULL if full else QUICK
+    graph = graph_of(spec["dataset"])
+    patterns = [get_pattern(n) for n in spec["patterns"]]
+    cfg = ExecutorConfig(capacity=spec["capacity"])
+    sched = _churn_schedule(graph, seed=17, rounds=spec["rounds"],
+                            n_ins=spec["ins"], n_del=spec["dels"])
+    keys = {"dataset": spec["dataset"], "patterns": len(patterns),
+            "rounds": spec["rounds"]}
+
+    # ---- phase A: one live engine across every churn round
+    live_engine = QueryEngine(graph, cfg=cfg, live=True,
+                              metrics=fresh_registry())
+    _serve(live_engine, patterns)            # steady state: warm plans
+    t0 = time.perf_counter()
+    live_counts = []
+    for ins, dels, _ in sched:
+        live_engine.request_mutation("insert_edges", ins)
+        live_engine.request_mutation("delete_edges", dels)
+        live_counts.append(_serve(live_engine, patterns))
+    live_s = time.perf_counter() - t0
+    lsum = live_engine.summary()["live"]
+
+    # ---- phase A reference: drop the engine, rebuild per round
+    t0 = time.perf_counter()
+    reload_counts = []
+    for ins, dels, edges in sched:
+        g = GraphCSR.from_edges(graph.n, edges,
+                                name=f"{graph.name}-reload")
+        reload_counts.append(_serve(QueryEngine(g, cfg=cfg), patterns))
+    reload_s = time.perf_counter() - t0
+    assert live_counts == reload_counts, "live ⊕ delta drifted from rebuilt"
+
+    n_queries = spec["rounds"] * len(patterns)
+    live_qps = n_queries / live_s
+    reload_qps = n_queries / reload_s
+
+    # ---- phase B: incremental vs full recount, ≤1% dirty
+    n = 2048
+    ring = sorted({(min(u, v), max(u, v))
+                   for i in range(n)
+                   for u, v in ((i, (i + 1) % n), (i, (i + 2) % n))})
+    rg = GraphCSR.from_edges(n, ring, name="ring2048")
+    tri = get_pattern("triangle")
+    inc_engine = QueryEngine(rg, cfg=cfg, live=True, chunk=256)
+    t0 = time.perf_counter()
+    _serve(inc_engine, [tri])                # full count, memoized
+    full_s = time.perf_counter() - t0
+    full_disp = inc_engine.last_round_dispatches
+    inc_engine.request_mutation("insert_edges", [(100, 103)])
+    t0 = time.perf_counter()
+    inc_count = _serve(inc_engine, [tri])[0]
+    inc_s = time.perf_counter() - t0
+    inc_disp = inc_engine.last_round_dispatches
+    isum = inc_engine.summary()["live"]
+    assert isum["incremental_hits"] == 1, isum
+    assert inc_disp < full_disp, (inc_disp, full_disp)
+    want = count_embeddings_oracle(
+        n, inc_engine.live.materialize_edges(), tri)
+    assert inc_count == want, (inc_count, want)
+    dirty_frac = len(inc_engine.live.dirty_vertices()) / n
+
+    return [
+        Row("live_churn", {**keys, "phase": "live"}, live_qps,
+            "queries/s",
+            {"mutations": lsum["mutations_applied"],
+             "rebinds": lsum["matcher_rebinds"],
+             "rebuilds": lsum["matcher_rebuilds"],
+             "compactions": lsum["compactions"]}),
+        Row("live_churn", {**keys, "phase": "reload"}, reload_qps,
+            "queries/s", {}),
+        Row("live_churn", {**keys, "phase": "speedup"},
+            live_qps / reload_qps, "x",
+            {"live_s": round(live_s, 4), "reload_s": round(reload_s, 4)}),
+        Row("live_churn", {"graph": "ring2048", "phase": "incremental"},
+            full_disp / max(inc_disp, 1), "x_dispatches",
+            {"full_dispatches": full_disp, "inc_dispatches": inc_disp,
+             "full_s": round(full_s, 4), "inc_s": round(inc_s, 4),
+             "spans_reused": isum["spans_reused"],
+             "dirty_frac": round(dirty_frac, 5)}),
+    ]
+
+
+def main(full: bool = False) -> None:
+    emit(run(full), "live_churn")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main("--full" in sys.argv)

@@ -23,6 +23,7 @@ from . import (
     fig12_scaling,
     gateway_mix,
     kernel_intersect,
+    live_churn,
     query_throughput,
     questions,
     tab2_restrictions,
@@ -42,6 +43,7 @@ BENCHES = {
     "query": query_throughput.main,  # serve path: cold vs warm queries/s
     "gateway": gateway_mix.main,     # mixed graph+LM: coalescing/interference
     "questions": questions.main,     # labeled QA: oracle accuracy + q/s
+    "live_churn": live_churn.main,   # serve-while-mutating vs reload
 }
 
 

@@ -19,6 +19,13 @@ trend, not so single samples gate merges.
 
 The sha/date come from `git show -s` (the commit under test), not the
 wall clock, so re-recording the same commit is reproducible.
+
+Local runs additionally snapshot the recognized artifacts to repo-root
+`BENCH_gateway.json` / `BENCH_questions.json` / `BENCH_live_churn.json`
+(--no-snapshots to skip), and a run that finds NO artifacts exits 0 —
+the first run of a fresh checkout has no previous artifact and must not
+fail the job (--strict restores the old non-zero exit for CI stages
+that require artifacts to exist).
 """
 from __future__ import annotations
 
@@ -40,7 +47,36 @@ WELL_KNOWN = {
     "gateway_mix.tenant_adversarial_p99_ms": (
         "gateway_mix.json", "tenant_adversarial"),
     "gateway_mix.coalesced_executions": ("gateway_mix.json", "coalesce"),
+    "live_churn.live_qps": ("live_churn.json", "live"),
+    "live_churn.reload_qps": ("live_churn.json", "reload"),
+    "live_churn.speedup_x": ("live_churn.json", "speedup"),
+    "live_churn.incremental_x": ("live_churn.json", "incremental"),
 }
+
+# Local snapshot names: repo-root BENCH_<name>.json copies of the latest
+# artifacts, so a developer run leaves an inspectable trajectory seed
+# without the CI artifact plumbing.
+SNAPSHOTS = {
+    "BENCH_gateway.json": "gateway_mix.json",
+    "BENCH_questions.json": "questions.json",
+    "BENCH_live_churn.json": "live_churn.json",
+}
+
+
+def write_snapshots(bench_dir: str, root: str) -> list[str]:
+    """Copy recognized artifacts to repo-root BENCH_*.json; returns the
+    snapshot paths written.  Missing sources are skipped silently —
+    partial bench runs snapshot what they measured."""
+    written = []
+    for out_name, src_name in SNAPSHOTS.items():
+        rows = _rows(os.path.join(bench_dir, src_name))
+        if not rows:
+            continue
+        path = os.path.join(root, out_name)
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+        written.append(path)
+    return written
 
 
 def _rows(path: str) -> list[dict]:
@@ -124,13 +160,23 @@ def main(argv=None) -> int:
     ap.add_argument("--bench-dir", default=os.environ.get(
         "REPRO_BENCH_OUT", "artifacts/bench-smoke"))
     ap.add_argument("--out", default="artifacts/bench/trajectory.jsonl")
+    ap.add_argument("--snapshot-root", default=".",
+                    help="directory for local BENCH_*.json snapshots")
+    ap.add_argument("--no-snapshots", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail (exit 1) when no artifacts are found; the "
+                         "default is a clean exit so a first run with no "
+                         "previous artifact never breaks the job")
     args = ap.parse_args(argv)
 
     metrics = collect(args.bench_dir)
     if not metrics:
         print(f"bench_record: no recognizable artifacts under "
               f"{args.bench_dir!r}; nothing recorded", file=sys.stderr)
-        return 1
+        return 1 if args.strict else 0
+    if not args.no_snapshots:
+        for path in write_snapshots(args.bench_dir, args.snapshot_root):
+            print(f"bench_record: snapshot {path}")
     record = {**git_meta(), "metrics": metrics}
     prev = last_record(args.out)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

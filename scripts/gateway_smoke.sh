@@ -9,7 +9,12 @@
 #      queries (--expect-coalesced) and finish its LM steps;
 #   3. replay the SAME trace through the RPC socket front door
 #      (launch/gateway.py --listen + repro.serve.rpc client, with a
-#      preemption budget active) — every count bit-identical again.
+#      preemption budget active) — every count bit-identical again;
+#   4. (ISSUE 10) mutate-then-replay through a --live server: a trace
+#      interleaving queries with insert_edges/delete_edges/compact
+#      mutations, with every count diffed against a reference engine on
+#      a CSR rebuilt FROM SCRATCH at the same epoch — the delta overlay
+#      must be invisible in the results.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -78,5 +83,88 @@ if ! cmp -s "$tmp/legacy.counts" "$tmp/rpc.counts"; then
   diff "$tmp/legacy.counts" "$tmp/rpc.counts" >&2 || true
   exit 1
 fi
+echo "== live path (--live server, mutate-then-replay vs rebuilt CSR) =="
+cat > "$tmp/mutate.jsonl" <<'EOF'
+{"pattern": "triangle"}
+{"pattern": "P1"}
+{"mutate": "insert_edges", "edges": [[0, 1], [0, 2], [1, 2], [3, 250], [4, 251]]}
+{"mutate": "delete_edges", "edges": [[0, 1], [5, 6]]}
+{"pattern": "triangle"}
+{"pattern": "P1"}
+{"mutate": "compact"}
+{"pattern": "triangle"}
+EOF
+python -m repro.launch.gateway --dataset tiny-er --no-lm --live \
+  --capacity 8192 --single-device --graph-quantum 4 \
+  --listen 0 --port-file "$tmp/port_live" \
+  > "$tmp/live_server.log" 2>&1 &
+live_pid=$!
+for _ in $(seq 1 120); do
+  [ -s "$tmp/port_live" ] && break
+  if ! kill -0 "$live_pid" 2>/dev/null; then
+    echo "gateway_smoke FAILED: live RPC server died during startup:" >&2
+    cat "$tmp/live_server.log" >&2
+    exit 1
+  fi
+  sleep 1
+done
+[ -s "$tmp/port_live" ] || { echo "gateway_smoke FAILED: no live port file" >&2; exit 1; }
+read -r host port < "$tmp/port_live"
+python -m repro.serve.rpc --connect "$host:$port" \
+  --requests "$tmp/mutate.jsonl" --shutdown | tee "$tmp/live.log"
+wait "$live_pid" || {
+  echo "gateway_smoke FAILED: live RPC server exited nonzero:" >&2
+  cat "$tmp/live_server.log" >&2
+  exit 1
+}
+cat "$tmp/live_server.log"
+grep -o 'count=[0-9]*' "$tmp/live.log" > "$tmp/live.counts"
+
+# reference: rebuild the CSR from scratch at every mutation epoch and
+# answer the same queries on frozen engines — no overlay involved
+python - "$tmp/mutate.jsonl" <<'EOF' > "$tmp/rebuilt.counts"
+import json, sys
+
+from repro.configs.graphpi import get_dataset
+from repro.core.executor import ExecutorConfig
+from repro.graph.csr import GraphCSR
+from repro.query import QueryEngine, QueryRequest
+from repro.serve.rpc import request_from_spec
+
+base = get_dataset("tiny-er")
+edges = set(map(tuple, base.edge_array().tolist()))
+cfg = ExecutorConfig(capacity=8192)
+engine, epoch = None, -1
+cur_epoch = 0
+for line in open(sys.argv[1]):
+    spec = json.loads(line)
+    if "mutate" in spec:
+        batch = {tuple(sorted(map(int, e))) for e in spec.get("edges", [])}
+        if spec["mutate"] == "insert_edges":
+            edges |= batch
+        elif spec["mutate"] == "delete_edges":
+            edges -= batch
+        cur_epoch += 1          # compact: content unchanged, engine reusable
+        continue
+    if epoch != cur_epoch:
+        g = GraphCSR.from_edges(base.n, sorted(edges), name="rebuilt")
+        engine, epoch = QueryEngine(g, cfg=cfg), cur_epoch
+    t = engine.enqueue(request_from_spec(spec))
+    while not t.done:
+        engine.run_pending()
+    print(f"count={t.result.count}")
+EOF
+if ! cmp -s "$tmp/live.counts" "$tmp/rebuilt.counts"; then
+  echo "gateway_smoke FAILED: live (overlay) counts differ from the" >&2
+  echo "rebuilt-from-scratch CSR reference:" >&2
+  diff "$tmp/live.counts" "$tmp/rebuilt.counts" >&2 || true
+  exit 1
+fi
+grep -q 'mutations=' "$tmp/live_server.log" || {
+  echo "gateway_smoke FAILED: live server summary missing mutation stats" >&2
+  exit 1
+}
+
 echo "gateway_smoke OK: $(wc -l < "$tmp/legacy.counts") counts identical
-across legacy, gateway, and RPC socket paths"
+across legacy, gateway, and RPC socket paths; $(wc -l < "$tmp/live.counts")
+live-mutation counts identical to the rebuilt-from-scratch CSR"

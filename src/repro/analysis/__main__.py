@@ -80,7 +80,8 @@ def run_fsck(store_dir: Path) -> list[Finding]:
     sys.stdout.write(
         f"fsck: {report['checked']} records checked, "
         f"{report['quarantined']} quarantined, "
-        f"{report['stats_checked']} stats records checked\n")
+        f"{report['stats_checked']} stats records checked, "
+        f"{report['overlays_checked']} overlay records checked\n")
     return out
 
 

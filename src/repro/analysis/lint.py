@@ -1,7 +1,7 @@
 """Pass 3 — repo-invariant lint: AST enforcement of rules the codebase
 states only in comments.
 
-Five rule classes over `src/repro`:
+The rule classes over `src/repro`:
 
   scheduler-no-jax        serve/scheduler.py promises "Nothing in this
                           module imports JAX" — the Gateway relies on it
@@ -52,6 +52,18 @@ Five rule classes over `src/repro`:
                           aliasing that no runtime check catches —
                           so the lint fails if the function loses its
                           labels reference OR disappears outright.
+  no-stale-fingerprint    modules under serve/ and query/ must not stash
+                          a graph fingerprint on long-lived object state
+                          (`self.fp = graph.fingerprint`, `self._key =
+                          graph_fingerprint(...)`): on a live engine the
+                          graph mutates between rounds, so a captured
+                          fingerprint silently keys new-epoch counts
+                          under an old-epoch identity.  Hold an
+                          `EpochStamp` (live/epoch.py) instead — it is
+                          swapped atomically at round boundaries — and
+                          read fingerprints through it at use sites.
+                          Locals are fine; only attribute stores
+                          (state that survives a round) are flagged.
 
 Pure `ast` — no imports of the linted modules, so a module that fails
 to import is still lintable (and a syntax error becomes a finding).
@@ -189,6 +201,36 @@ def _check_traced_body(fn, rel: str) -> list[Finding]:
     return out
 
 
+def _mentions_fingerprint(node: ast.AST) -> bool:
+    """Does this expression read a `.fingerprint` attribute (property or
+    method) or call/reference `graph_fingerprint`?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "fingerprint":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "graph_fingerprint":
+            return True
+    return False
+
+
+def _check_stale_fingerprint(node, rel: str) -> list[Finding]:
+    """no-stale-fingerprint: an attribute store in serve/query whose
+    value derives from a fingerprint captures graph identity on state
+    that outlives the round — stale the moment a live engine mutates."""
+    targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+    if not any(isinstance(sub, ast.Attribute)
+               for t in targets for sub in ast.walk(t)):
+        return []
+    value = node.value
+    if value is None or not _mentions_fingerprint(value):
+        return []
+    return [_err(
+        "no-stale-fingerprint", f"{rel}:{node.lineno}",
+        "fingerprint captured on long-lived state in the serve/query "
+        "path; on a live engine it goes stale at the next mutation "
+        "round — hold an EpochStamp (repro.live.epoch) and read "
+        "fingerprints through it at use sites instead")]
+
+
 def _references_token(fn: ast.AST, token: str) -> bool:
     """Does the function body mention `token` as an attribute, name, or
     string literal (dict key)?"""
@@ -319,6 +361,10 @@ def lint_source(src: str, rel: str) -> list[Finding]:
                     f"{name}: raw timing in the serve/query path — use "
                     f"repro.obs (timer()/Timer or a tracer span) so the "
                     f"measurement reaches the metrics registry"))
+
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            if is_timed:
+                out += _check_stale_fingerprint(node, rel)
 
         elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             if _has_jit_decorator(node) or node.name.endswith(("_body",

@@ -732,6 +732,39 @@ class Matcher:
         self._traced_fns.clear()
         self._arrays = None
 
+    def rebind(self, arrays, *, graph=None) -> None:
+        """Swap the resident device arrays for same-shaped replacements
+        (a live-overlay epoch or compaction swap, src/repro/live/).
+
+        Compiled count programs take the graph arrays as ARGUMENTS, so a
+        same-shape swap replays every cached jit/AOT trace untouched —
+        zero recompiles.  Any shape or dtype difference raises
+        ValueError (the overlay genuinely grew); the caller must rebuild
+        the matcher instead.  `graph` additionally swaps the host-side
+        view, and must preserve the compiled gather window and vertex
+        count (both are baked into the traces via `_W` and v0 padding).
+        """
+        if self._arrays is None:
+            raise RuntimeError("matcher was released (evicted from cache)")
+        old = jax.tree_util.tree_leaves(tuple(self._arrays))
+        new = jax.tree_util.tree_leaves(tuple(arrays))
+        if (len(old) != len(new)
+                or any(tuple(a.shape) != tuple(b.shape) or a.dtype != b.dtype
+                       for a, b in zip(old, new))):
+            raise ValueError(
+                "rebind needs identical array shapes/dtypes; the graph "
+                "outgrew its fixed layout — rebuild the matcher")
+        if graph is not None:
+            if max(graph.max_degree, 1) != self._W:
+                raise ValueError(
+                    f"rebind window {max(graph.max_degree, 1)} != compiled "
+                    f"window {self._W}")
+            if graph.n != self.graph.n:
+                raise ValueError(
+                    f"rebind vertex count {graph.n} != {self.graph.n}")
+            self.graph = graph
+        self._arrays = arrays
+
     def count(self, *, chunk: int | None = None) -> CountResult:
         """Chunked outer loop; a chunk that overflows capacity is bisected
         and retried (host-side adaptivity — the SPMD analogue of the
@@ -935,6 +968,31 @@ class ShardedMatcher:
         self._fns.clear()
         self._arrays = None
         self._v0 = None
+
+    def rebind(self, arrays, *, graph=None) -> None:
+        """Mirror of :meth:`Matcher.rebind` — the striped v0 layout
+        depends only on `n` (unchanged by overlay epochs), so swapping
+        the CSR arrays replays the cached shard_map programs as-is."""
+        if self._arrays is None:
+            raise RuntimeError("matcher was released (evicted from cache)")
+        old = jax.tree_util.tree_leaves(tuple(self._arrays))
+        new = jax.tree_util.tree_leaves(tuple(arrays))
+        if (len(old) != len(new)
+                or any(tuple(a.shape) != tuple(b.shape) or a.dtype != b.dtype
+                       for a, b in zip(old, new))):
+            raise ValueError(
+                "rebind needs identical array shapes/dtypes; the graph "
+                "outgrew its fixed layout — rebuild the matcher")
+        if graph is not None:
+            if max(graph.max_degree, 1) != self._W:
+                raise ValueError(
+                    f"rebind window {max(graph.max_degree, 1)} != compiled "
+                    f"window {self._W}")
+            if graph.n != self.graph.n:
+                raise ValueError(
+                    f"rebind vertex count {graph.n} != {self.graph.n}")
+            self.graph = graph
+        self._arrays = arrays
 
     def count(self) -> CountResult:
         if self._arrays is None:

@@ -1,7 +1,7 @@
 """Graph generators and loaders.
 
 The container is offline, so the paper's SNAP graphs are stood in for by
-synthetic generators matched to their |V|/|E| scale (DESIGN.md §9).  The
+synthetic generators matched to their |V|/|E| scale (DESIGN.md §10).  The
 edge-list loader accepts the exact SNAP format, so the real datasets plug
 in unchanged on a connected machine.
 """

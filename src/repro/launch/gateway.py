@@ -92,6 +92,11 @@ def main(argv=None):
                          "run every class to completion)")
     ap.add_argument("--tenant-depth", type=int, default=0,
                     help="max queued tickets per tenant (0 = unbounded)")
+    ap.add_argument("--live", action="store_true",
+                    help="serve over a MUTABLE graph: accept mutate RPC "
+                         "verbs (insert_edges/delete_edges/compact), "
+                         "applied at round boundaries via the delta "
+                         "overlay (src/repro/live/)")
     # ---- shared
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--single-device", action="store_true",
@@ -146,9 +151,11 @@ def main(argv=None):
         stats=stats, metrics=metrics,
         preempt_dispatches=args.preempt_dispatches or None,
         tenant_depth=args.tenant_depth or None,
+        live=args.live or None,
     )
     print(f"[gateway] graph={graph.name} (|V|={graph.n}, |E|={graph.m}) "
           f"resident on {engine.summary()['devices']} device(s)"
+          f"{'; LIVE (mutable, delta overlay)' if args.live else ''}"
           f"{'; model buckets ' + repr(cfg.degree_buckets) if args.model_buckets else ''}")
     if args.warm_from_disk:
         n = engine.warm_from_disk()
@@ -204,6 +211,14 @@ def main(argv=None):
               f"{s['executions']} executions, {s['coalesced']} coalesced, "
               f"{s['preemptions']} preemptions, "
               f"{s['rejections']} rejected")
+        if args.live:
+            lv = s["live"]
+            print(f"[gateway] live: edge_epoch={lv['edge_epoch']} "
+                  f"mutations={lv['mutations_applied']} "
+                  f"compactions={lv['compactions']} "
+                  f"rebinds={lv['matcher_rebinds']} "
+                  f"incremental={lv['incremental_hits']} "
+                  f"memo_hits={lv['memo_hits']}")
         finish_tracing(args, registry=metrics, tag="gateway")
         return 0
 

@@ -15,6 +15,16 @@ Naming convention (DESIGN.md §7): keys are
     engine.query_latency_ms{...percentile summary...}
     scheduler.turn_item_ms{phase=contended,workload=graph}
 
+Live engines (query/engine.py with a delta overlay) contribute a
+``live.*`` family: ``live.epoch`` / ``live.stats_epoch`` (current edge
+and stats epochs), ``live.overlay_edges``, ``live.compactions``,
+``live.mutations_applied``, ``live.pending_mutations``,
+``live.matcher_rebinds`` / ``live.matcher_rebuilds`` (epoch swaps that
+reused vs recompiled the resident matchers), and the maintainer's
+counters (``live.memo_hits``, ``live.incremental_hits``,
+``live.full_recounts``, ``live.memo_invalidations``,
+``live.spans_reused``, ``live.spans_recomputed``).
+
 Histograms are deterministic bounded reservoirs: when full, the
 reservoir thins by doubling its sampling stride (keep every 2nd, then
 every 4th, ...) instead of random eviction — the scheduler path is

@@ -193,16 +193,24 @@ class PlanCache:
         chunk: int | None = None,
         arrays=None,
         warm: bool = True,
+        graph_fp: tuple | None = None,
     ) -> tuple[CacheEntry, bool]:
         """Return (entry, was_hit).  Misses run the configuration search,
         build the plan, and (when `warm`) JIT-compile the matcher before
-        the entry becomes visible — a hit NEVER searches or compiles."""
+        the entry becomes visible — a hit NEVER searches or compiles.
+
+        `graph_fp` overrides the graph facet of the entry key: live
+        engines pass their `EpochStamp.plan_key` (stable across edge
+        mutations) so plans and AOT executables survive churn; when
+        omitted the legacy content-fingerprint tuple is derived here."""
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; have {MODES}")
         cfg = cfg or ExecutorConfig()
         key = self.entry_key(
-            pattern, graph_fingerprint(graph, stats), cfg,
-            mode=mode, use_iep=use_iep,
+            pattern,
+            graph_fp if graph_fp is not None
+            else graph_fingerprint(graph, stats),
+            cfg, mode=mode, use_iep=use_iep,
             layout_fp=layout_fingerprint(mesh, axis, chunk, cfg),
         )
         entry = self._entries.get(key)
@@ -334,17 +342,20 @@ class PlanCache:
     def preload(self, graph: GraphCSR, stats: GraphStats, *,
                 cfg: ExecutorConfig | None = None, mesh=None,
                 axis: str = "data", chunk: int | None = None,
-                arrays=None, warm: bool = True) -> int:
+                arrays=None, warm: bool = True,
+                graph_fp: tuple | None = None) -> int:
         """Warm-from-disk: install every store record compatible with the
         current serving context (same graph/executor/layout fingerprints
         — checked by re-deriving each record's key digest) before the
-        first request arrives.  Returns the number of entries installed."""
+        first request arrives.  Returns the number of entries installed.
+        `graph_fp` as in :meth:`get_or_build` (live epoch plan keys)."""
         if self.store is None:
             return 0
         from .store import key_digest
 
         cfg = cfg or ExecutorConfig()
-        gfp = graph_fingerprint(graph, stats)
+        gfp = (graph_fp if graph_fp is not None
+               else graph_fingerprint(graph, stats))
         lfp = layout_fingerprint(mesh, axis, chunk, cfg)
         installed = 0
         for rec in self.store.records():

@@ -52,10 +52,13 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.executor import ExecutorConfig, compute_stats, device_graph
+from ..core.executor import (ExecutorConfig, Matcher, ShardedMatcher,
+                             compute_stats, device_graph)
 from ..core.pattern import Pattern
 from ..core.perf_model import GraphStats
 from ..graph.csr import GraphCSR
+from ..live import (CompactionPolicy, CountMaintainer, DeltaOverlay,
+                    EpochStamp, maybe_compact, stats_drifted)
 from ..obs import MetricsRegistry, get_tracer, latency_summary, timer
 from .cache import DEFAULT_MAX_ENTRIES, CacheEntry, PlanCache
 from .canon import canonical_key
@@ -198,6 +201,14 @@ class QueryEngine:
              still mid-count when the budget runs out is checkpointed and
              rotated behind other waiting classes.  ``None`` = run every
              class in the round to completion (pre-preemption behaviour).
+    live:    ``True`` (or a prebuilt `DeltaOverlay`) serves over a
+             MUTABLE graph: `request_mutation` queues insert/delete/
+             compact verbs that apply atomically at round boundaries
+             (src/repro/live/) — plans/AOT survive mutations via the
+             stats-epoch plan key, counts memoize/invalidate on the
+             edge-epoch key, and a `CountMaintainer` refreshes only
+             dirty root spans.
+    compaction_policy: live-mode thresholds (`live.CompactionPolicy`).
     """
 
     def __init__(self, graph: GraphCSR, *, cfg: ExecutorConfig | None = None,
@@ -208,7 +219,17 @@ class QueryEngine:
                  metrics: MetricsRegistry | None = None,
                  tenant_depth: int | None = None,
                  tenant_shares: dict[str, int] | None = None,
-                 preempt_dispatches: int | None = None):
+                 preempt_dispatches: int | None = None,
+                 live=None,
+                 compaction_policy: CompactionPolicy | None = None):
+        if live is True:
+            live = DeltaOverlay(graph)
+        elif live is not None and not isinstance(live, DeltaOverlay):
+            raise TypeError(
+                f"live must be True or a DeltaOverlay, got {type(live)!r}")
+        self.live = live
+        if live is not None:
+            graph = live.view              # executor-facing adjacency
         self.graph = graph
         self.cfg = cfg or ExecutorConfig()
         self.mesh = mesh
@@ -235,6 +256,18 @@ class QueryEngine:
                             graph.fingerprint, stats)
         self.stats = stats
         self.stats_seconds = t.seconds
+        # round-boundary epoch identity: serving code carries THIS
+        # stamp, never raw fingerprints (`no-stale-fingerprint`)
+        self._epoch = (EpochStamp.for_live(live, stats) if live is not None
+                       else EpochStamp.legacy(graph, stats))
+        self._maintainer = (CountMaintainer(live) if live is not None
+                            else None)
+        self.compaction_policy = compaction_policy or CompactionPolicy()
+        self._mutations: deque = deque()       # queued (verb, edges) batches
+        self.mutations_applied = 0             # effective edge changes
+        self.last_round_mutations = 0          # batches applied last round
+        self.matcher_rebinds = 0               # zero-recompile epoch swaps
+        self.matcher_rebuilds = 0              # shape-growth rebuilds
         # registries are per-engine (benchmarks/run.py executes several
         # benchmark mains in one process; each needs a clean window) —
         # launchers that want one pane pass a shared instance
@@ -277,6 +310,19 @@ class QueryEngine:
         if self.cache.store is not None:
             for k, v in self.cache.store.stats.as_dict().items():
                 out[f"store.{k}"] = v
+        if self.live is not None:
+            out.update({
+                "live.epoch": self.live.edge_epoch,
+                "live.stats_epoch": self.live.stats_epoch,
+                "live.overlay_edges": self.live.overlay_edges(),
+                "live.compactions": self.live.compactions,
+                "live.mutations_applied": self.mutations_applied,
+                "live.pending_mutations": len(self._mutations),
+                "live.matcher_rebinds": self.matcher_rebinds,
+                "live.matcher_rebuilds": self.matcher_rebuilds,
+            })
+            for k, v in self._maintainer.counters().items():
+                out[f"live.{k}"] = v
         return out
 
     # ------------------------------------------------------ async serving
@@ -291,6 +337,7 @@ class QueryEngine:
                 cfg=self.cfg, mesh=self.mesh, axis=self.axis,
                 mode=request.mode, use_iep=request.use_iep,
                 chunk=self.chunk, arrays=self._arrays,
+                graph_fp=self._epoch.plan_key,
             )
             sp.set(cache_hit=hit, canon_key=entry.canon_key)
         return PlannedQuery(entry=entry, cache_hit=hit)
@@ -349,6 +396,109 @@ class QueryEngine:
         (checkpointed by the preemption budget, resumes next round)."""
         return sum(len(f.tickets) for f in self._inflight)
 
+    # --------------------------------------------------------- mutation
+    def mutations_pending(self) -> int:
+        """Queued mutation batches (0 for non-live engines — safe for
+        schedulers to poll unconditionally)."""
+        return len(self._mutations)
+
+    def request_mutation(self, verb: str, edges=None) -> dict:
+        """Queue one mutation batch (`insert_edges` / `delete_edges` /
+        `compact`).  Batches apply atomically at the START of the next
+        round — never under an in-flight `CountState` — so a query
+        submitted after this call is answered on the post-mutation
+        epoch.  Returns an ack with the queue depth and current epoch."""
+        if self.live is None:
+            raise RuntimeError(
+                "engine is not live: construct QueryEngine(..., live=True) "
+                "to serve mutate verbs")
+        from ..live import MUTATION_VERBS
+
+        if verb not in MUTATION_VERBS:
+            raise ValueError(
+                f"unknown mutation verb {verb!r}; have {MUTATION_VERBS}")
+        batch = None
+        if verb != "compact":
+            batch = [(int(e[0]), int(e[1])) for e in (edges or ())]
+        self._mutations.append((verb, batch))
+        return {
+            "verb": verb,
+            "queued_edges": 0 if batch is None else len(batch),
+            "pending_batches": len(self._mutations),
+            "edge_epoch": self.live.edge_epoch,
+        }
+
+    def _apply_mutations(self) -> int:
+        """Drain the mutation queue at a round boundary.
+
+        In-flight groups are cleanly RE-ENQUEUED (their tickets return
+        to the head of their tenant queues in admission order and the
+        partial `CountState`s are dropped): a preempted count never
+        resumes across an epoch, so every resolved count is computed
+        entirely on one epoch's adjacency."""
+        live = self.live
+        batches = len(self._mutations)
+        requeue = [t for fl in self._inflight for t in fl.tickets]
+        with get_tracer().span("engine.mutate", batches=batches,
+                               requeued=len(requeue)):
+            self._inflight.clear()
+            for t in sorted(requeue, key=lambda t: t.seq, reverse=True):
+                self._queues.setdefault(t.request.tenant,
+                                        deque()).appendleft(t)
+            applied = 0
+            while self._mutations:
+                verb, batch = self._mutations.popleft()
+                applied += live.apply(verb, batch)
+            maybe_compact(live, self.compaction_policy)
+            if stats_drifted(live, self.stats, self.compaction_policy):
+                # |E| moved materially: plans stay valid but their
+                # perf-model ranking is stale — bump the stats epoch so
+                # the next plan() re-searches under fresh statistics
+                live.stats_epoch += 1
+                self.stats = compute_stats(live.view, self.cfg)
+                if self.cache.store is not None:
+                    self.cache.store.save_graph_stats(
+                        live.view.fingerprint, self.stats)
+            self._refresh_live()
+        self.mutations_applied += applied
+        self.last_round_mutations = batches
+        if self.cache.store is not None:
+            self.cache.store.save_overlay(live.to_record())
+        return applied
+
+    def _refresh_live(self) -> None:
+        """Swap the new epoch's view/device arrays into the engine and
+        every cached matcher.  Fixed overlay shapes make this a rebind
+        (zero recompiles); genuine growth rebuilds matchers honestly
+        (counted in `cache.stats.n_compiles` / `matcher_rebuilds`)."""
+        live = self.live
+        view = live.view
+        arrays = device_graph(view)
+        for entry in self.cache.entries():
+            try:
+                entry.matcher.rebind(arrays, graph=view)
+                self.matcher_rebinds += 1
+            except ValueError:
+                if entry.sharded:
+                    matcher = ShardedMatcher(
+                        view, entry.plan, self.mesh, axis=self.axis,
+                        cfg=self.cfg, chunk=self.chunk, arrays=arrays)
+                    matcher.warmup()
+                else:
+                    matcher = Matcher(view, entry.plan, self.cfg,
+                                      arrays=arrays)
+                    matcher.warmup(chunk=self.chunk)
+                self.cache.stats.n_compiles += 1
+                entry.matcher.release()
+                entry.matcher = matcher
+                self.matcher_rebuilds += 1
+        self.graph = view
+        self._arrays = arrays
+        self._epoch = EpochStamp.for_live(live, self.stats)
+        # oracle memos are content-addressed to the old epoch
+        self._oracle.clear()
+        self._edges = None
+
     @staticmethod
     def _group_key(request: QueryRequest) -> tuple:
         # mirrors PlanCache.entry_key normalization: naive ignores
@@ -403,6 +553,11 @@ class QueryEngine:
                     else max_dispatches)
         remaining = None if budget_n is None else max(int(budget_n), 1)
         self.last_round_dispatches = 0
+        self.last_round_mutations = 0
+        if self._mutations:
+            # round boundary: apply queued mutations BEFORE taking
+            # tickets, so everything executed below runs on one epoch
+            self._apply_mutations()
         take = self._take_tickets(limit)
         fresh = 0
         for t in take:
@@ -457,8 +612,13 @@ class QueryEngine:
                 riders=len(fl.tickets) - 1,
                 resumed=fl.state is not None):
             with timer() as t_run:
-                fl.state, out = entry.count_partial(
-                    fl.state, chunk=self.chunk, max_dispatches=remaining)
+                if self._maintainer is not None:
+                    fl.state, out = self._maintainer.count_partial(
+                        fl.key, entry, fl.state, chunk=self.chunk,
+                        max_dispatches=remaining)
+                else:
+                    fl.state, out = entry.count_partial(
+                        fl.state, chunk=self.chunk, max_dispatches=remaining)
             fl.seconds += t_run.seconds
         # sharded counts report no per-dispatch state (one logical unit)
         used = (1 if fl.state is None
@@ -567,7 +727,8 @@ class QueryEngine:
         number of entries installed (0 without an attached store)."""
         return self.cache.preload(
             self.graph, self.stats, cfg=self.cfg, mesh=self.mesh,
-            axis=self.axis, chunk=self.chunk, arrays=self._arrays)
+            axis=self.axis, chunk=self.chunk, arrays=self._arrays,
+            graph_fp=self._epoch.plan_key)
 
     # ------------------------------------------------------------- reporting
     def reset_window(self) -> None:
@@ -630,4 +791,15 @@ class QueryEngine:
         }
         if self.cache.store is not None:
             out["store"] = self.cache.store.stats.as_dict()
+        if self.live is not None:
+            out["live"] = {
+                "edge_epoch": self.live.edge_epoch,
+                "stats_epoch": self.live.stats_epoch,
+                "overlay_edges": self.live.overlay_edges(),
+                "compactions": self.live.compactions,
+                "mutations_applied": self.mutations_applied,
+                "matcher_rebinds": self.matcher_rebinds,
+                "matcher_rebuilds": self.matcher_rebuilds,
+                **self._maintainer.counters(),
+            }
         return out

@@ -176,12 +176,18 @@ class PlanStore:
                 out.append((v, d))
         return out
 
+    # Non-plan record filename prefixes sharing the version dirs:
+    # graph-stats records and live-overlay records (both keyed on graph
+    # content, not plan keys).
+    _AUX_PREFIXES = ("stats-", "live-")
+
     def __len__(self) -> int:
         return sum(
             1
             for _, d in self._version_dirs()
             for f in os.listdir(d)
-            if f.endswith(".json") and not f.startswith("stats-")
+            if f.endswith(".json")
+            and not f.startswith(self._AUX_PREFIXES)
         )
 
     # ------------------------------------------------------------ paths
@@ -423,7 +429,8 @@ class PlanStore:
         seen: set[str] = set()
         for _, vdir in self._version_dirs():
             for fname in sorted(os.listdir(vdir)):
-                if not fname.endswith(".json") or fname.startswith("stats-"):
+                if not fname.endswith(".json") or \
+                        fname.startswith(self._AUX_PREFIXES):
                     continue
                 digest = fname[: -len(".json")]
                 if digest in seen:
@@ -493,23 +500,110 @@ class PlanStore:
         self.stats.loads += 1
         return stats
 
+    # ---------------------------------------------------- overlay records
+    # A live engine's delta overlay (live/overlay.py) is graph state, not
+    # plan state: the record is keyed by the ORIGINAL base graph's content
+    # fingerprint and holds the cumulative insert/delete sets vs that
+    # base, so a restarted replica can replay the mutations and resume at
+    # the same edge epoch.  Like stats records it survives code upgrades;
+    # only a schema change or structural damage rejects it.
+    def _overlay_path(self, base_fingerprint: str) -> str:
+        return os.path.join(self.vdir, f"live-{base_fingerprint}.json")
+
+    @staticmethod
+    def _check_overlay(rec: dict, base_fingerprint: str | None = None
+                       ) -> str | None:
+        """None when structurally valid, else the rejection reason.
+        Validates exactly what `DeltaOverlay.from_record` will trust:
+        normalized (u < v, non-negative int) edge pairs, disjoint
+        insert/delete sets, non-negative epoch counters."""
+        if rec.get("schema_version") != SCHEMA_VERSION:
+            return "overlay_schema"
+        fp = rec.get("base_fingerprint")
+        if not isinstance(fp, str) or not fp:
+            return "overlay_fingerprint"
+        if base_fingerprint is not None and fp != base_fingerprint:
+            return "overlay_fingerprint"
+        for key in ("edge_epoch", "stats_epoch", "compactions"):
+            v = rec.get(key)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                return "overlay_epoch"
+        sets = {}
+        for key in ("inserts", "deletes"):
+            edges = rec.get(key)
+            if not isinstance(edges, list):
+                return "overlay_edges"
+            seen = set()
+            for e in edges:
+                if (not isinstance(e, list) or len(e) != 2
+                        or not all(isinstance(x, int)
+                                   and not isinstance(x, bool)
+                                   for x in e)
+                        or not 0 <= e[0] < e[1]):
+                    return "overlay_edges"
+                seen.add((e[0], e[1]))
+            sets[key] = seen
+        if sets["inserts"] & sets["deletes"]:
+            return "overlay_edges"
+        return None
+
+    def save_overlay(self, record: dict) -> bool:
+        """Write-behind one live-overlay record (the engine calls this at
+        every mutation round boundary); False on a structurally invalid
+        record or write failure — live serving never crashes on a bad
+        disk, it just loses restart-resume."""
+        rec = {"schema_version": SCHEMA_VERSION,
+               "created_at": time.time(), **record}
+        if self._check_overlay(rec) is not None:
+            self.stats.save_fails += 1
+            return False
+        try:
+            self._atomic_write(
+                self._overlay_path(rec["base_fingerprint"]),
+                json.dumps(rec, separators=(",", ":")).encode())
+        except OSError:
+            self.stats.save_fails += 1
+            return False
+        self.stats.saves += 1
+        return True
+
+    def load_overlay(self, base_fingerprint: str) -> dict | None:
+        """The persisted overlay record for this base graph, or None
+        (counted) — feed it to `DeltaOverlay.from_record` to resume."""
+        path = self._overlay_path(base_fingerprint)
+        if not os.path.exists(path):
+            self.stats.misses += 1
+            return None
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.stats.reject("overlay_corrupt")
+            return None
+        reason = self._check_overlay(rec, base_fingerprint)
+        if reason is not None:
+            self.stats.reject(reason)
+            return None
+        self.stats.loads += 1
+        return rec
+
     # -------------------------------------------------------------- fsck
     def fsck(self) -> dict:
         """Re-prove every on-disk record sound; quarantine what fails.
 
         Runs the analysis soundness pass (`verify_plan`) over each plan
-        record and structural validation over each stats record, MOVING
-        failures into `<vdir>/quarantine/` so they stop being served but
-        stay inspectable.  Counted, never raised — fsck on a damaged
-        store must report, not crash (same policy as load).  Returns
-        {"checked", "quarantined", "stats_checked", "findings"} with
-        `findings` keyed by digest.
+        record and structural validation over each stats and live-overlay
+        record, MOVING failures into `<vdir>/quarantine/` so they stop
+        being served but stay inspectable.  Counted, never raised — fsck
+        on a damaged store must report, not crash (same policy as load).
+        Returns {"checked", "quarantined", "stats_checked",
+        "overlays_checked", "findings"} with `findings` keyed by digest.
         """
         from ..analysis.findings import ERROR, Finding, has_errors
         from ..analysis.soundness import verify_plan
 
         report = {"checked": 0, "quarantined": 0, "stats_checked": 0,
-                  "findings": {}}
+                  "overlays_checked": 0, "findings": {}}
         with get_tracer().span("store.fsck", root=self.root) as fsp:
             for version, vdir in self._version_dirs():
                 for fname in sorted(os.listdir(vdir)):
@@ -527,6 +621,18 @@ class PlanStore:
                                 ERROR, "stats-record", digest,
                                 "stats record is corrupt or its fingerprint "
                                 "does not match its filename"))
+                    elif fname.startswith("live-"):
+                        if version != SCHEMA_VERSION:
+                            continue  # legacy overlay: stale, not unsound
+                        report["overlays_checked"] += 1
+                        fp = fname[len("live-"): -len(".json")]
+                        if self.load_overlay(fp) is None:
+                            findings.append(Finding(
+                                ERROR, "overlay-record", digest,
+                                "live-overlay record is corrupt, claims "
+                                "unnormalized/overlapping edge sets, or "
+                                "its base fingerprint does not match its "
+                                "filename"))
                     else:
                         report["checked"] += 1
                         findings = self._fsck_record(

@@ -90,19 +90,23 @@ class GraphQueryWorkload:
 
     def ready(self) -> bool:
         # a preempted class (taken off the queue, mid-count) still needs
-        # rounds to finish — inflight work keeps the workload hot
-        return self.engine.pending() > 0 or self.engine.inflight() > 0
+        # rounds to finish — inflight work keeps the workload hot; so do
+        # queued mutations (live engines apply them at round boundaries)
+        return (self.engine.pending() > 0 or self.engine.inflight() > 0
+                or self.engine.mutations_pending() > 0)
 
     def step(self, quantum: int) -> StepReport:
         with timer() as t:
             resolved = self.engine.run_pending(limit=quantum)
         # a fully-preempted quantum resolves zero tickets but dispatched
-        # real kernels: report progress so the scheduler keeps rounds
-        # coming (StepReport.progressed, scheduler stall-break)
+        # real kernels — and a mutation-only round made real progress
+        # too: report it so the scheduler keeps rounds coming
+        # (StepReport.progressed, scheduler stall-break)
         return StepReport(
             items=len(resolved), seconds=t.seconds,
             progressed=bool(resolved)
-            or self.engine.last_round_dispatches > 0)
+            or self.engine.last_round_dispatches > 0
+            or self.engine.last_round_mutations > 0)
 
     def results(self):
         """Resolved results in admission order (unresolved tickets are

@@ -24,6 +24,16 @@ run several connections for concurrency).  Operations:
         -> {"ok": true, "result": {..., "count": N, "line": "..."}}
     {"op": "cancel", "ticket": 7} -> {"ok": true|false}
     {"op": "stats"}               -> {"ok": true, "stats": engine summary}
+    {"op": "mutate", "verb": "insert_edges" | "delete_edges" | "compact",
+     "edges": [[u, v], ...]}      -> {"ok": true, "verb": ...,
+                                      "queued_edges": N,
+                                      "pending_batches": B,
+                                      "edge_epoch": E}
+        Live engines only (`launch/gateway.py --live`).  The batch is
+        QUEUED and applies atomically at the next round boundary
+        (src/repro/live/), so the ordering is deterministic: any submit
+        acked after this mutate ack is answered on the post-mutation
+        epoch, and no in-flight count ever straddles epochs.
     {"op": "shutdown"}            -> {"ok": true}  (server exits after)
 
 CONCURRENCY MODEL.  JAX dispatch is per-process serial, so the server
@@ -41,6 +51,10 @@ every count; tests/test_rpc.py asserts the same in-process).
 `python -m repro.serve.rpc --connect HOST:PORT --requests trace.jsonl`
 is the reference client: submits every request in the trace, then
 prints each result line (in submission order) like the launcher does.
+A trace line `{"mutate": "insert_edges", "edges": [[u,v],...]}` drains
+outstanding results first (pre-mutation counts print on their admission
+epoch), then sends the mutate frame — so a trace interleaving queries
+and mutations replays as a deterministic epoch history.
 """
 from __future__ import annotations
 
@@ -235,6 +249,13 @@ class GatewayRPCServer:
         if op == "stats":
             return {"ok": True, "stats": self.engine.summary(),
                     "rounds": self.rounds}
+        if op == "mutate":
+            ack = self.engine.request_mutation(msg.get("verb"),
+                                               msg.get("edges"))
+            # the queued batch applies at the next round boundary; wake
+            # the drive loop so a drained server still processes it
+            self._work.set()
+            return {"ok": True, **ack}
         if op == "shutdown":
             self._stop_ev.set()
             return {"ok": True}
@@ -325,6 +346,15 @@ class RPCClient:
             raise RPCError(resp)
         return resp
 
+    def mutate(self, verb: str, edges=None) -> dict:
+        msg = {"op": "mutate", "verb": verb}
+        if edges is not None:
+            msg["edges"] = [[int(u), int(v)] for u, v in edges]
+        resp = self.call(msg)
+        if not resp.get("ok"):
+            raise RPCError(resp)
+        return resp
+
     def shutdown(self) -> None:
         self.call({"op": "shutdown"})
 
@@ -344,23 +374,45 @@ def main(argv=None) -> int:
     host, _, port = args.connect.rpartition(":")
     client = RPCClient(host or "127.0.0.1", int(port),
                        tenant=args.tenant, timeout=args.timeout)
-    tickets = []
+    rc = 0
+    tickets: list[int] = []
+
+    def flush() -> None:
+        """Print results for every outstanding ticket, in order."""
+        nonlocal rc
+        for tk in tickets:
+            try:
+                r = client.result(tk)
+                print("[rpc]", r["line"])
+                if r.get("verified") is False:
+                    rc = 1
+            except RPCError as e:
+                print(f"[rpc] ticket {tk} FAILED: {e}")
+                rc = 1
+        tickets.clear()
+
     with open(args.requests) as f:
         for line in f:
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
-            tickets.append(client.submit(json.loads(line)))
-    rc = 0
-    for tk in tickets:
-        try:
-            r = client.result(tk)
-            print("[rpc]", r["line"])
-            if r.get("verified") is False:
-                rc = 1
-        except RPCError as e:
-            print(f"[rpc] ticket {tk} FAILED: {e}")
-            rc = 1
+            spec = json.loads(line)
+            if "mutate" in spec:
+                # drain first so earlier submits are answered (and
+                # printed) on their admission epoch, then mutate — the
+                # trace reads as a deterministic epoch history
+                flush()
+                try:
+                    ack = client.mutate(spec["mutate"], spec.get("edges"))
+                    print(f"[rpc] mutate {ack['verb']} "
+                          f"queued_edges={ack['queued_edges']} "
+                          f"edge_epoch={ack['edge_epoch']}")
+                except RPCError as e:
+                    print(f"[rpc] mutate FAILED: {e}")
+                    rc = 1
+                continue
+            tickets.append(client.submit(spec))
+    flush()
     if args.shutdown:
         client.shutdown()
     client.close()

@@ -253,6 +253,32 @@ def test_lint_compat_only_drift():
     assert not lint_source(src, "repro/compat.py")   # shim home is exempt
 
 
+def test_lint_no_stale_fingerprint():
+    src = ("class Engine:\n"
+           "    def __init__(self, graph, stats):\n"
+           "        self.fp = graph.fingerprint\n"          # attr store
+           "    def rekey(self, graph, stats):\n"
+           "        self._key = graph_fingerprint(graph, stats)\n")
+    for rel in ("serve/gateway.py", "query/engine.py",
+                "src/repro/query/cache.py"):
+        f = [x for x in lint_source(src, rel)
+             if x.rule == "no-stale-fingerprint"]
+        assert len(f) == 2, rel
+    # locals don't outlive a round — reading fingerprints at the use
+    # site is exactly what the rule steers toward
+    ok = ("def f(graph, stats):\n"
+          "    fp = graph.fingerprint\n"
+          "    return graph_fingerprint(graph, stats), fp\n")
+    assert not lint_source(ok, "serve/gateway.py")
+    # epoch objects are the sanctioned long-lived identity
+    epoch = ("class Engine:\n"
+             "    def bump(self, live, stats):\n"
+             "        self._epoch = EpochStamp.for_live(live, stats)\n")
+    assert not lint_source(epoch, "query/engine.py")
+    # outside serve/query the engine's lifecycle rules don't apply
+    assert not lint_source(src, "core/executor.py")
+
+
 def test_lint_tracer_concretize():
     src = ("import jax\nfrom functools import partial\n"
            "@partial(jax.jit, static_argnames=('n',))\n"

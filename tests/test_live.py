@@ -1,0 +1,374 @@
+"""Live-graph subsystem (ISSUE 10): delta overlays, epoch fingerprints,
+incremental count maintenance.
+
+The load-bearing claims: counts over base ⊕ delta are ORACLE-EXACT under
+randomized churn (portable and fused paths, before and after
+compaction); after a mutation the plan cache replays with zero searches
+and zero compiles while stale count memos are provably invalidated;
+compaction preserves the content-derived edge key (memos survive it);
+mutations land only at round boundaries, so a preempted whale or a
+submit racing a mutate never yields a mixed-epoch count; and the
+overlay record round-trips through the PlanStore (fsck understands and
+quarantines damaged ones)."""
+import numpy as np
+import pytest
+
+from repro.configs.graphpi import get_pattern
+from repro.core.executor import ExecutorConfig, compute_stats
+from repro.core.oracle import count_embeddings_oracle
+from repro.graph.csr import GraphCSR
+from repro.graph.datasets import erdos_renyi, rmat
+from repro.live import (
+    DeltaOverlay, EpochStamp, MUTATION_VERBS, edge_delta_digest,
+)
+from repro.query import QueryEngine, QueryRequest
+from repro.query.store import PlanStore
+
+CFG = ExecutorConfig(capacity=1 << 12)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return erdos_renyi(64, 256, seed=7, name="er64")
+
+
+def _churn_batches(graph, seed, rounds, n_ins=8, n_del=4):
+    """Deterministic (insert_batch, delete_batch) pairs; deletes always
+    target edges present at that point in the replayed sequence."""
+    rng = np.random.default_rng(seed)
+    edges = set(map(tuple, graph.edge_array().tolist()))
+    out = []
+    for _ in range(rounds):
+        ins = []
+        while len(ins) < n_ins:
+            u, v = sorted(int(x) for x in rng.integers(0, graph.n, 2))
+            if u != v and (u, v) not in edges and (u, v) not in ins:
+                ins.append((u, v))
+        edges |= set(ins)
+        pool = sorted(edges)
+        dels = [pool[i] for i in
+                rng.choice(len(pool), size=n_del, replace=False)]
+        edges -= set(dels)
+        out.append((ins, dels))
+    return out, edges
+
+
+def _absent_edge(graph, k=0):
+    """k-th lexicographic vertex pair NOT in the graph (u < v)."""
+    seen = 0
+    for u in range(graph.n):
+        for v in range(u + 1, graph.n):
+            if not graph.has_edge(u, v):
+                if seen == k:
+                    return (u, v)
+                seen += 1
+    raise AssertionError("graph is complete")
+
+
+def _drain(engine, request):
+    t = engine.enqueue(request)
+    while not t.done:
+        engine.run_pending()
+    return t.result.count
+
+
+# -------------------------------------------------------- overlay (unit)
+def test_view_matches_rebuilt_csr_per_vertex(graph):
+    live = DeltaOverlay(graph)
+    batches, final_edges = _churn_batches(graph, seed=3, rounds=3)
+    for ins, dels in batches:
+        live.apply("insert_edges", ins)
+        live.apply("delete_edges", dels)
+    ref = GraphCSR.from_edges(graph.n, sorted(final_edges))
+    view = live.view
+    assert view.m == ref.m
+    for v in range(graph.n):
+        assert view.neighbors(v).tolist() == ref.neighbors(v).tolist(), v
+    # compaction relays the same content; the view is again pure-base
+    live.compact()
+    assert live.overlay_edges() == 0
+    for v in range(graph.n):
+        assert live.view.neighbors(v).tolist() == \
+            ref.neighbors(v).tolist(), v
+
+
+def test_noop_mutations_do_not_bump_epoch(graph):
+    live = DeltaOverlay(graph)
+    e0 = live.edge_epoch
+    present = tuple(int(x) for x in graph.edge_array()[0])
+    absent = _absent_edge(graph)
+    assert live.apply("insert_edges", [present]) == 0    # already there
+    assert live.apply("delete_edges", [absent]) == 0     # never there
+    assert live.edge_epoch == e0
+    assert live.apply("insert_edges", [absent]) == 1
+    assert live.edge_epoch == e0 + 1
+
+
+def test_edge_key_is_content_derived(graph):
+    """Same cumulative delta ⇒ same key regardless of mutation order;
+    reverting a mutation restores the ORIGINAL key (memos revalidate);
+    compaction never changes it."""
+    key0 = DeltaOverlay(graph).edge_key
+    live = DeltaOverlay(graph)
+    victim = tuple(int(x) for x in graph.edge_array()[3])
+    fresh = _absent_edge(graph)
+    live.apply("insert_edges", [fresh])
+    live.apply("delete_edges", [victim])
+    k1 = live.edge_key
+    assert k1 != key0
+    other = DeltaOverlay(graph)
+    other.apply("delete_edges", [victim])
+    other.apply("insert_edges", [fresh])
+    assert other.edge_key == k1                  # order-independent
+    live.compact()
+    assert live.edge_key == k1                   # content unchanged
+    live.apply("delete_edges", [fresh])
+    live.apply("insert_edges", [victim])
+    assert live.edge_key == key0                 # full revert
+    assert edge_delta_digest(live.base0_fingerprint, set(), set()) == key0
+
+
+def test_edge_key_memoized_per_epoch(graph):
+    live = DeltaOverlay(graph)
+    n0 = live._edge_key_computes
+    for _ in range(10):
+        live.edge_key
+    assert live._edge_key_computes == n0 + 1     # O(1) per-round checks
+    live.apply("insert_edges", [_absent_edge(graph)])
+    live.edge_key
+    live.edge_key
+    assert live._edge_key_computes == n0 + 2     # one recompute per epoch
+
+
+def test_overflow_auto_compacts(graph):
+    live = DeltaOverlay(graph, patch_capacity=graph.max_degree + 9)
+    batches, final_edges = _churn_batches(graph, seed=11, rounds=4,
+                                          n_ins=12, n_del=2)
+    for ins, dels in batches:
+        live.apply("insert_edges", ins)
+        live.apply("delete_edges", dels)
+    assert live.compactions >= 1                 # patch region overflowed
+    ref = GraphCSR.from_edges(graph.n, sorted(final_edges))
+    for v in range(graph.n):
+        assert live.view.neighbors(v).tolist() == \
+            ref.neighbors(v).tolist(), v
+
+
+def test_epoch_stamp_levels(graph):
+    live = DeltaOverlay(graph)
+    stats = compute_stats(live.view, CFG)
+    s0 = EpochStamp.for_live(live, stats)
+    live.apply("insert_edges", [_absent_edge(graph)])
+    s1 = EpochStamp.for_live(live, stats)
+    assert s1.plan_key == s0.plan_key            # plans/AOT survive edits
+    assert s1.edge_key != s0.edge_key            # count memos do not
+    live.stats_epoch += 1
+    s2 = EpochStamp.for_live(live, stats)
+    assert s2.plan_key != s1.plan_key            # stats refresh re-plans
+
+
+# ------------------------------------------------ oracle-exact churn
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_churn_counts_oracle_exact(graph, use_pallas):
+    """Randomized insert/delete batches with queries between each, on
+    both executor paths, with a compaction in the middle: every count
+    equals the backtracking oracle on the rebuilt graph."""
+    cfg = ExecutorConfig(capacity=1 << 12, use_pallas=use_pallas)
+    eng = QueryEngine(graph, cfg=cfg, live=True)
+    patterns = [get_pattern("triangle"), get_pattern("P1")]
+    batches, _ = _churn_batches(graph, seed=5, rounds=4)
+    for i, (ins, dels) in enumerate(batches):
+        eng.request_mutation("insert_edges", ins)
+        eng.request_mutation("delete_edges", dels)
+        if i == 2:
+            eng.request_mutation("compact")
+        for p in patterns:
+            got = _drain(eng, QueryRequest(p))
+            cur = eng.live.materialize_edges()
+            want = count_embeddings_oracle(graph.n, cur, p)
+            assert got == want, (i, p.name, got, want)
+    assert eng.live.compactions >= 1
+
+
+@pytest.mark.slow
+def test_churn_oracle_exact_small_rmat():
+    g = rmat(10, 8, seed=5, name="small-rmat")
+    eng = QueryEngine(g, cfg=CFG, live=True)
+    tri = get_pattern("triangle")
+    batches, _ = _churn_batches(g, seed=9, rounds=2, n_ins=16, n_del=8)
+    for ins, dels in batches:
+        eng.request_mutation("insert_edges", ins)
+        eng.request_mutation("delete_edges", dels)
+        got = _drain(eng, QueryRequest(tri))
+        want = count_embeddings_oracle(g.n, eng.live.materialize_edges(),
+                                       tri)
+        assert got == want
+
+
+# ------------------------------------- epoch keys: replay vs invalidate
+def test_mutation_replays_plans_invalidates_memos(graph):
+    """After a mutation: zero plan searches, zero recompiles (the plan
+    key rides the stats epoch; the resident matchers rebind in place) —
+    while the memoized count is invalidated and the new count is
+    correct."""
+    eng = QueryEngine(graph, cfg=CFG, live=True)
+    tri = get_pattern("triangle")
+    c0 = _drain(eng, QueryRequest(tri))
+    searches = eng.cache.stats.n_searches
+    compiles = eng.cache.stats.n_compiles
+    eng.request_mutation("insert_edges",
+                         [_absent_edge(graph, k) for k in range(4)])
+    c1 = _drain(eng, QueryRequest(tri))
+    assert eng.cache.stats.n_searches == searches    # no re-search
+    assert eng.cache.stats.n_compiles == compiles    # no re-compile
+    s = eng.summary()["live"]
+    assert s["matcher_rebinds"] >= 1 and s["matcher_rebuilds"] == 0
+    assert s["memo_invalidations"] >= 1              # stale memo dropped
+    want = count_embeddings_oracle(graph.n, eng.live.materialize_edges(),
+                                   tri)
+    assert c1 == want and c1 != c0
+
+
+def test_memo_hit_same_epoch_and_across_compaction(graph):
+    eng = QueryEngine(graph, cfg=CFG, live=True)
+    tri = get_pattern("triangle")
+    c0 = _drain(eng, QueryRequest(tri))
+    c1 = _drain(eng, QueryRequest(tri))              # same epoch: memo
+    assert eng.summary()["live"]["memo_hits"] == 1
+    assert eng.last_round_dispatches == 0            # zero kernel work
+    eng.request_mutation("compact")
+    c2 = _drain(eng, QueryRequest(tri))              # edge_key unchanged
+    assert eng.summary()["live"]["memo_hits"] == 2
+    assert c0 == c1 == c2
+
+
+# --------------------------------------------- incremental maintenance
+def test_incremental_recount_reuses_clean_spans():
+    """Ring-lattice graph (all adjacency index-local) + one edge insert:
+    only the spans owning the dirty neighborhood re-expand; every other
+    span's total is carried over, and the result is still oracle-exact."""
+    n = 512
+    edges = [(i, (i + 1) % n) for i in range(n)] + \
+            [(i, (i + 2) % n) for i in range(n)]
+    edges = sorted({(min(u, v), max(u, v)) for u, v in edges})
+    g = GraphCSR.from_edges(n, edges, name="ring512")
+    eng = QueryEngine(g, cfg=CFG, live=True, chunk=64)   # 8 spans
+    tri = get_pattern("triangle")
+    _drain(eng, QueryRequest(tri))                   # memoize full count
+    full_dispatches = eng.last_round_dispatches
+    eng.request_mutation("insert_edges", [(100, 103)])
+    got = _drain(eng, QueryRequest(tri))
+    s = eng.summary()["live"]
+    assert s["incremental_hits"] == 1 and s["full_recounts"] == 0
+    assert s["spans_reused"] >= 6                    # ≥6 of 8 untouched
+    assert eng.last_round_dispatches < full_dispatches
+    want = count_embeddings_oracle(n, eng.live.materialize_edges(), tri)
+    assert got == want
+
+
+def test_global_churn_falls_back_to_full_recount(graph):
+    """Edits touching most spans must NOT go incremental (break-even)."""
+    eng = QueryEngine(graph, cfg=CFG, live=True, chunk=8)
+    tri = get_pattern("triangle")
+    _drain(eng, QueryRequest(tri))
+    ins = [(u, v) for u in range(0, 64, 8) for v in (u + 3,)
+           if not graph.has_edge(u, v)]
+    eng.request_mutation("insert_edges", ins)        # every span dirtied
+    got = _drain(eng, QueryRequest(tri))
+    s = eng.summary()["live"]
+    assert s["full_recounts"] >= 1
+    want = count_embeddings_oracle(graph.n, eng.live.materialize_edges(),
+                                   tri)
+    assert got == want
+
+
+# ------------------------------------ round-boundary mutation semantics
+def test_preempted_whale_across_mutation(graph):
+    """A class suspended mid-count when a mutation lands is re-enqueued
+    and recounted on the new epoch — never a mixed-epoch count."""
+    eng = QueryEngine(graph, cfg=CFG, live=True, chunk=8,
+                      preempt_dispatches=1)
+    p3 = get_pattern("P3")
+    t = eng.enqueue(QueryRequest(p3))
+    eng.run_pending()                                # starts, suspends
+    assert not t.done and eng.inflight() == 1
+    eng.request_mutation("insert_edges",
+                         [_absent_edge(graph, k) for k in range(4)])
+    while not t.done:
+        eng.run_pending()
+    assert eng.preemptions >= 1
+    want = count_embeddings_oracle(graph.n, eng.live.materialize_edges(),
+                                   p3)
+    assert t.result.count == want
+
+
+def test_submit_racing_mutate_is_round_deterministic(graph):
+    """Tickets enqueued before AND after a mutation request resolve in
+    the same round — and both see the post-mutation graph, because
+    mutations apply at the round boundary before tickets are taken."""
+    eng = QueryEngine(graph, cfg=CFG, live=True)
+    tri = get_pattern("triangle")
+    t_before = eng.enqueue(QueryRequest(tri))
+    eng.request_mutation("insert_edges",
+                         [_absent_edge(graph, k) for k in range(4)])
+    t_after = eng.enqueue(QueryRequest(tri))
+    eng.run_pending()
+    assert t_before.done and t_after.done
+    want = count_embeddings_oracle(graph.n, eng.live.materialize_edges(),
+                                   tri)
+    assert t_before.result.count == t_after.result.count == want
+
+
+def test_request_mutation_validates(graph):
+    eng = QueryEngine(graph, cfg=CFG, live=True)
+    with pytest.raises(ValueError):
+        eng.request_mutation("explode", [(0, 1)])
+    frozen = QueryEngine(graph, cfg=CFG)
+    with pytest.raises(RuntimeError):
+        frozen.request_mutation("insert_edges", [(0, 1)])
+    assert frozen.mutations_pending() == 0
+    ack = eng.request_mutation("insert_edges", [(0, 63)])
+    assert set(ack) == {"verb", "queued_edges", "pending_batches",
+                        "edge_epoch"}
+    assert eng.mutations_pending() == 1
+    assert "compact" in MUTATION_VERBS
+
+
+# --------------------------------------------------- overlay persistence
+def test_overlay_record_roundtrip_and_fsck(graph, tmp_path):
+    store = PlanStore(str(tmp_path / "plans"))
+    eng = QueryEngine(graph, cfg=CFG, live=True, store=store)
+    tri = get_pattern("triangle")
+    eng.request_mutation("insert_edges", [(0, 63), (1, 62)])
+    eng.request_mutation("delete_edges",
+                         [tuple(int(x) for x in graph.edge_array()[0])])
+    c = _drain(eng, QueryRequest(tri))
+    rec = store.load_overlay(eng.live.base0_fingerprint)
+    assert rec is not None                   # write-behind at the round
+    resumed = DeltaOverlay.from_record(graph, rec)
+    assert resumed.edge_key == eng.live.edge_key
+    eng2 = QueryEngine(graph, cfg=CFG, live=resumed)
+    assert _drain(eng2, QueryRequest(tri)) == c
+    report = store.fsck()
+    assert report["overlays_checked"] == 1 and report["quarantined"] == 0
+    # damage it: unnormalized pair → fsck quarantines, load rejects
+    import json
+    path = store._overlay_path(eng.live.base0_fingerprint)
+    bad = dict(rec, inserts=[[63, 0]])
+    with open(path, "w") as f:
+        json.dump(bad, f)
+    report = store.fsck()
+    assert report["quarantined"] == 1
+    assert store.load_overlay(eng.live.base0_fingerprint) is None
+
+
+def test_save_overlay_rejects_malformed(tmp_path, graph):
+    store = PlanStore(str(tmp_path / "plans"))
+    live = DeltaOverlay(graph)
+    rec = live.to_record()
+    assert store.save_overlay(rec)
+    assert not store.save_overlay(dict(rec, edge_epoch=-1))
+    assert not store.save_overlay(dict(rec, inserts=[[2, 2]]))
+    assert not store.save_overlay(dict(rec, inserts=[[0, 5]],
+                                       deletes=[[0, 5]]))
+    assert len(store) == 0                   # never counted as a plan
